@@ -1,0 +1,47 @@
+"""Anti-money-laundering screening: count the paper's Figure-1 motifs on a
+financial-transaction graph with planted laundering structures.
+
+    PYTHONPATH=src python examples/fraud_detection.py
+
+The fintxn generator plants temporal cycles (round-tripping), scatter-
+gather bursts (smurfing) and bipartite layering on top of a power-law
+background; TIMEST estimates each pattern's count in seconds, and the
+planted structures make the counts strikingly non-null vs a clean
+background control — the paper's motivating use case (Fig. 1, refs
+[6, 29, 52, 56]).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.estimator import estimate            # noqa: E402
+from repro.core.motif import get_motif               # noqa: E402
+from repro.graphs import (fintxn_temporal_graph,     # noqa: E402
+                          powerlaw_temporal_graph)
+
+
+def screen(g, label: str, delta: int) -> None:
+    print(f"\n=== {label}: n={g.n} accounts, m={g.m} transfers ===")
+    for name in ("M5-3", "scatter-gather", "bipartite"):
+        motif = get_motif(name)
+        res = estimate(g, motif, delta, k=1 << 15, seed=0)
+        print(f"  {name:16s} C^ = {res.estimate:12.1f}   "
+              f"(valid {100 * res.valid_rate:5.1f}%, W={res.W})")
+
+
+def main() -> None:
+    delta = 2_000
+    dirty = fintxn_temporal_graph(n_accounts=400, m=6_000,
+                                  time_span=200_000, n_rings=15,
+                                  ring_size=5, n_smurf=12, seed=0)
+    clean = powerlaw_temporal_graph(n=400, m=6_000, time_span=200_000,
+                                    seed=1)
+    screen(dirty, "transactions WITH planted laundering", delta)
+    screen(clean, "clean background control", delta)
+    print("\nInterpretation: the planted rings/smurfing inflate the "
+          "temporal-cycle and scatter-gather counts by orders of "
+          "magnitude over the control.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the granite family config scaled to ~100M params, synthetic token
+streams with learnable structure (so the loss demonstrably falls), the
+hand-rolled AdamW + cosine schedule, grad accumulation, and the resumable
+checkpointing driver — kill it mid-run and rerun to watch it resume.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                           # noqa: E402
+import jax.numpy as jnp                              # noqa: E402
+import numpy as np                                   # noqa: E402
+
+from repro.models.transformer import (LMConfig, init_params,  # noqa: E402
+                                      train_loss)
+from repro.train.fault_tolerance import run_resumable         # noqa: E402
+from repro.train.optimizer import AdamWConfig, adamw_init     # noqa: E402
+from repro.train.steps import make_train_step                 # noqa: E402
+
+
+def lm100m() -> LMConfig:
+    """~100M params: 12L x d=768 x 12H, granite-style SwiGLU GQA."""
+    return LMConfig(name="lm100m", n_layers=12, d_model=768, n_heads=12,
+                    n_kv_heads=4, d_ff=2048, vocab=8_192)
+
+
+def batch_fn(cfg, B, S, step, attempt=0):
+    """Markov-chain tokens: structure a 100M LM can actually learn."""
+    r = np.random.default_rng(1000 * step + attempt)
+    # block-diagonal-ish transition structure
+    state = r.integers(0, cfg.vocab, size=B)
+    toks = np.empty((B, S + 1), np.int64)
+    for t in range(S + 1):
+        toks[:, t] = state
+        jump = r.random(B) < 0.1
+        state = np.where(jump, r.integers(0, cfg.vocab, size=B),
+                         (state * 31 + 7) % cfg.vocab)
+    return dict(tokens=jnp.asarray(toks[:, :-1], jnp.int32),
+                labels=jnp.asarray(toks[:, 1:], jnp.int32),
+                mask=jnp.ones((B, S), jnp.float32))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    cfg = lm100m()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={n_params / 1e6:.1f}M")
+
+    opt_cfg = AdamWConfig(lr=6e-4, total_steps=args.steps, warmup_steps=20)
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: train_loss(cfg, p, b), opt_cfg, accum_steps=2))
+    state = dict(params=params, opt=adamw_init(params))
+
+    t0 = time.perf_counter()
+
+    def do_step(state, batch, step):
+        p, o, m = step_fn(state["params"], state["opt"], batch)
+        m = {k: float(v) for k, v in m.items()}
+        if step % 20 == 0:
+            print(f"  step {step:4d}  loss {m['loss']:.4f}  "
+                  f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}  "
+                  f"({time.perf_counter() - t0:.0f}s)", flush=True)
+        return dict(params=p, opt=o), m
+
+    state, report = run_resumable(
+        do_step, state,
+        next_batch=lambda s, a: batch_fn(cfg, args.batch, args.seq, s, a),
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50)
+
+    losses = [m["loss"] for m in report.metrics]
+    print(f"\n{report.steps_run} steps (resumed from "
+          f"{report.resumed_from}); loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f}")
+    if args.steps >= 100:  # short smoke runs are still inside warmup
+        assert losses[-1] < losses[0], "loss must fall on structured data"
+
+
+if __name__ == "__main__":
+    main()

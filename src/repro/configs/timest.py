@@ -1,0 +1,31 @@
+"""The paper's own estimator configuration (TIMEST defaults).
+
+Not an ``--arch`` entry (the assigned architectures are the NN zoo); this
+is the config object used by launch/estimate.py and the examples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TimestConfig:
+    motif: str = "M5-3"
+    delta: int = 10_000
+    k: int = 1 << 20             # samples
+    chunk: int = 8_192
+    Lmax: int = 16
+    n_candidates: int = 3        # spanning-tree candidates to exact-evaluate
+    roots_per_tree: int = 2
+    use_c2: bool = True
+    use_c3: bool = True
+    seed: int = 0
+    family: str = "estimator"
+
+
+def config() -> TimestConfig:
+    return TimestConfig()
+
+
+def smoke_config() -> TimestConfig:
+    return TimestConfig(motif="wedge", delta=500, k=1 << 12, chunk=1 << 10)

@@ -1,0 +1,99 @@
+"""Branchless fixed-trip binary searches over sorted segments (vectorized).
+
+``jnp.searchsorted`` only bisects a whole array; TIMEST needs millions of
+simultaneous bisections *into CSR segments* (temporal out/in/pair lists,
+Def. 4.1/4.2) and into *weighted CDFs with excluded sub-sequences*
+(Claim 4.8's ``Lambda \\ El``).  All searches below are data-parallel over
+arbitrary query batch shapes and run a fixed number of iterations so they
+vectorize/jit cleanly (and map 1:1 onto the Pallas `segment_bisect` kernel).
+
+Iteration count: 40 covers segments up to 2^40 elements (m < 10^12).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+ITERS = 40
+
+
+def seg_lower_bound(vals: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                    target: jnp.ndarray, iters: int = ITERS) -> jnp.ndarray:
+    """Smallest ``p in [lo, hi]`` with ``vals[p] >= target`` (``hi`` if none).
+
+    ``vals`` must be non-decreasing inside every queried ``[lo, hi)`` segment.
+    ``lo/hi/target`` broadcast together; gathers are clamped so ``lo == hi``
+    (empty segment) is safe.
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    nmax = vals.shape[0] - 1
+
+    def body(_, c):
+        l, h = c
+        mid = (l + h) >> 1
+        v = vals[jnp.clip(mid, 0, nmax)]
+        active = l < h
+        go_right = active & (v < target)
+        l2 = jnp.where(go_right, mid + 1, l)
+        h2 = jnp.where(active & ~go_right, mid, h)
+        return (l2, h2)
+
+    l, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return l
+
+
+def seg_upper_bound(vals: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                    target: jnp.ndarray, iters: int = ITERS) -> jnp.ndarray:
+    """Smallest ``p in [lo, hi]`` with ``vals[p] > target`` (``hi`` if none)."""
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    nmax = vals.shape[0] - 1
+
+    def body(_, c):
+        l, h = c
+        mid = (l + h) >> 1
+        v = vals[jnp.clip(mid, 0, nmax)]
+        active = l < h
+        go_right = active & (v <= target)
+        l2 = jnp.where(go_right, mid + 1, l)
+        h2 = jnp.where(active & ~go_right, mid, h)
+        return (l2, h2)
+
+    l, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return l
+
+
+def monotone_find(g, lo: jnp.ndarray, hi: jnp.ndarray, r: jnp.ndarray,
+                  iters: int = ITERS) -> jnp.ndarray:
+    """Generalized inverse CDF: smallest ``p in [lo, hi)`` with ``g(p+1) > r``.
+
+    ``g`` is any (vectorized) non-decreasing integer function of position with
+    ``g(lo) == 0``; requires ``0 <= r < g(hi)``.  Used for weighted sampling
+    where ``g`` is a prefix-sum *difference* (Lambda minus the excluded pair
+    sub-list), which is not a plain array — hence the callback form.
+
+    Invariant maintained: ``g(l) <= r < g(h)``; returns ``l`` with
+    ``g(l) <= r < g(l+1)`` — the sampled position (its effective weight is
+    positive, so excluded/zero-weight slots are never returned).
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+
+    def body(_, c):
+        l, h = c
+        mid = (l + h) >> 1
+        take_right = (h - l > 1) & (g(mid) <= r)
+        l2 = jnp.where(take_right, mid, l)
+        h2 = jnp.where((h - l > 1) & ~take_right, mid, h)
+        return (l2, h2)
+
+    l, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return l
+
+
+@partial(jax.jit, static_argnames=("side",))
+def _ss(vals, targets, side):
+    return jnp.searchsorted(vals, targets, side=side)

@@ -1,0 +1,190 @@
+"""End-to-end TIMEST estimation (paper Alg. 6/7).
+
+``estimate()`` = choose spanning tree -> preprocess weights -> sample in
+chunks -> validate + DeriveCnt -> rescale.  The chunk loop is restartable:
+chunk ``j`` always uses ``fold_in(base_key, j)``, so a checkpoint of
+``(chunks_done, accumulators)`` resumes bit-identically after a failure —
+the estimator-side fault-tolerance story (see train/fault_tolerance.py for
+the distributed version).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import asdict, dataclass, field
+
+from ..util import ensure_x64
+
+ensure_x64()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from .graph import TemporalGraph  # noqa: E402
+from .motif import TemporalMotif  # noqa: E402
+from .sampler import make_sample_fn  # noqa: E402
+from .spanning_tree import SpanningTree, candidate_trees  # noqa: E402
+from .validate import make_count_fn  # noqa: E402
+from .weights import Weights, preprocess  # noqa: E402
+
+
+def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
+    """Fused sample->validate->count->reduce for one chunk (one dispatch).
+
+    Fusing the two jits (a) removes one host dispatch per chunk and (b)
+    lets XLA dead-code the [K, S] sample arrays straight into the DP
+    instead of materializing them between calls; the chunk reduces to six
+    scalars on device, so host<->device traffic per chunk is O(1)
+    (section Perf, estimator iteration C2).
+    """
+    import jax as _jax
+
+    s_fn = make_sample_fn(tree, chunk)
+    c_fn = make_count_fn(tree, chunk, Lmax=Lmax)
+
+    def fn(dev, wts, key):  # jit-of-jit inlines cleanly
+
+        samples = s_fn(dev, wts, key)
+        out = c_fn(dev, wts, samples)
+        return {k: out[k].sum() for k in
+                ("cnt2", "valid", "fail_vmap", "fail_delta", "fail_order",
+                 "overflow")}
+    return _jax.jit(fn)
+
+
+@dataclass
+class EstimateResult:
+    estimate: float
+    W: int
+    k: int                      # samples drawn
+    valid: int
+    fail_vmap: int
+    fail_delta: int
+    fail_order: int
+    overflow: int
+    cnt2_sum: int
+    motif: str
+    tree_edges: tuple
+    delta: int
+    preprocess_s: float = 0.0
+    sampling_s: float = 0.0
+    tree_select_s: float = 0.0
+
+    @property
+    def valid_rate(self) -> float:
+        return self.valid / max(self.k, 1)
+
+    def summary(self) -> str:
+        return (f"{self.motif}: C^={self.estimate:.6g}  W={self.W}  "
+                f"k={self.k}  valid={100 * self.valid_rate:.1f}%  "
+                f"(pre {self.preprocess_s:.2f}s + samp {self.sampling_s:.2f}s)")
+
+
+def choose_tree(g: TemporalGraph, motif: TemporalMotif, delta: int,
+                n_candidates: int = 3, roots_per_tree: int = 2,
+                dev: dict | None = None, use_c2: bool = True,
+                use_c3: bool = True) -> tuple[SpanningTree, Weights]:
+    """Alg. 7: looseness-ranked candidates, exact W for top-k, min-W wins.
+
+    The per-sample cost is identical across trees of the same motif (same
+    |E(S)|, same number of non-tree lists), so Theorem 4.14 makes the
+    estimated runtime monotone in W — the tree with the smallest total
+    sampling weight is the fastest to converge.  Returns the winner together
+    with its (already computed) Weights so preprocessing is never repeated.
+    """
+    if dev is None:
+        dev = g.device_arrays()
+    cands = candidate_trees(motif, n_candidates=n_candidates,
+                            roots_per_tree=roots_per_tree)
+    best: tuple[int, SpanningTree, Weights] | None = None
+    for tree in cands:
+        w = preprocess(g, tree, delta, dev=dev, use_c2=use_c2, use_c3=use_c3)
+        Wt = int(w.W_total)
+        if best is None or Wt < best[0]:
+            best = (Wt, tree, w)
+    assert best is not None
+    return best[1], best[2]
+
+
+_ACC_KEYS = ("cnt2", "valid", "fail_vmap", "fail_delta", "fail_order",
+             "overflow")
+
+
+def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
+             seed: int = 0, tree: SpanningTree | None = None,
+             n_candidates: int = 3, chunk: int = 8192, Lmax: int = 16,
+             use_c2: bool = True, use_c3: bool = True,
+             checkpoint_path: str | None = None, checkpoint_every: int = 64,
+             dev: dict | None = None) -> EstimateResult:
+    """Alg. 6: the full TIMEST estimate with ``k`` samples."""
+    if dev is None:
+        dev = g.device_arrays()
+
+    t0 = time.perf_counter()
+    if tree is None:
+        tree, wts = choose_tree(g, motif, delta, n_candidates=n_candidates,
+                                dev=dev, use_c2=use_c2, use_c3=use_c3)
+        t_sel = time.perf_counter() - t0
+        t_pre = 0.0  # preprocessing is folded into selection
+    else:
+        t_sel = 0.0
+        t1 = time.perf_counter()
+        wts = preprocess(g, tree, delta, dev=dev, use_c2=use_c2,
+                         use_c3=use_c3)
+        t_pre = time.perf_counter() - t1
+
+    W = int(wts.W_total)
+    n_chunks = max(1, -(-k // chunk))
+    k_eff = n_chunks * chunk
+    acc = {kk: 0 for kk in _ACC_KEYS}
+    start_chunk = 0
+
+    if checkpoint_path and os.path.exists(checkpoint_path):
+        with open(checkpoint_path) as f:
+            st = json.load(f)
+        if (st["motif"] == motif.name and st["delta"] == delta
+                and st["seed"] == seed and st["chunk"] == chunk
+                and tuple(st["tree_edges"]) == tree.edge_ids):
+            acc = {kk: int(st["acc"][kk]) for kk in _ACC_KEYS}
+            start_chunk = int(st["chunks_done"])
+
+    result = EstimateResult(
+        estimate=0.0, W=W, k=0, valid=0, fail_vmap=0, fail_delta=0,
+        fail_order=0, overflow=0, cnt2_sum=0, motif=motif.name,
+        tree_edges=tree.edge_ids, delta=int(delta),
+        preprocess_s=t_pre, tree_select_s=t_sel)
+
+    if W == 0:
+        result.k = k_eff
+        return result
+
+    chunk_fn = make_chunk_fn(tree, chunk, Lmax=Lmax)
+    base_key = jax.random.PRNGKey(seed)
+
+    t2 = time.perf_counter()
+    for j in range(start_chunk, n_chunks):
+        kj = jax.random.fold_in(base_key, j)
+        sums = chunk_fn(dev, wts, kj)
+        for kk in _ACC_KEYS:
+            acc[kk] += int(sums[kk])
+        if checkpoint_path and ((j + 1) % checkpoint_every == 0
+                                or j == n_chunks - 1):
+            tmp = checkpoint_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(dict(motif=motif.name, delta=int(delta), seed=seed,
+                               chunk=chunk, tree_edges=list(tree.edge_ids),
+                               chunks_done=j + 1, acc=acc), f)
+            os.replace(tmp, checkpoint_path)
+    result.sampling_s = time.perf_counter() - t2
+
+    result.k = k_eff
+    result.cnt2_sum = acc["cnt2"]
+    result.valid = acc["valid"]
+    result.fail_vmap = acc["fail_vmap"]
+    result.fail_delta = acc["fail_delta"]
+    result.fail_order = acc["fail_order"]
+    result.overflow = acc["overflow"]
+    # C^ = W * mean(cnt / N_phi); cnt2 accumulates 2*cnt/N_phi exactly.
+    result.estimate = W * result.cnt2_sum / (2.0 * k_eff)
+    return result

@@ -1,0 +1,182 @@
+"""Temporal multigraph container (paper Sec. 4 preliminaries).
+
+Host-side construction in numpy; `.device_arrays()` ships the index structure
+to jax.  Everything the TPU-side DP/sampler needs is *sorted + CSR*:
+
+* edge arrays ``src/dst/t`` sorted globally by ``(t, id)``;
+* out-CSR: edges grouped by source, time-sorted inside each group;
+* in-CSR: ditto by destination;
+* pair-CSR: edges grouped by the ordered pair ``(src, dst)`` (the multi-edge
+  lists ``El_{u,v}`` of Def. 4.2), time-sorted;
+* cross-indices mapping each pair-CSR slot to its position inside the out-CSR
+  of ``src`` and the in-CSR of ``dst`` — these drive the masked inverse-CDF
+  sampler (``L = Lambda \\ El``, Claim 4.8) without materialising set minus;
+* per-edge ``pair_id`` and ``rev_pair_id`` (the pair (dst,src), -1 if absent).
+
+Timestamps are normalised to start at 0 (paper Sec. 4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+
+@dataclass
+class TemporalGraph:
+    n: int                      # vertices
+    m: int                      # temporal edges
+    src: np.ndarray             # [m] int32, sorted by (t, id)
+    dst: np.ndarray             # [m] int32
+    t: np.ndarray               # [m] int64, non-decreasing, starts at 0
+    # out-CSR (grouped by src, time-sorted within a group)
+    out_ptr: np.ndarray         # [n+1] int64
+    out_edge: np.ndarray        # [m] int32 edge ids
+    out_t: np.ndarray           # [m] int64 = t[out_edge]
+    # in-CSR (grouped by dst)
+    in_ptr: np.ndarray
+    in_edge: np.ndarray
+    in_t: np.ndarray
+    # pair-CSR (grouped by (src,dst))
+    num_pairs: int
+    pair_key: np.ndarray        # [P] sorted int64 keys src*n+dst
+    pair_ptr: np.ndarray        # [P+1]
+    pair_edge: np.ndarray       # [m]
+    pair_t: np.ndarray          # [m]
+    pair_id: np.ndarray         # [m] pair id of each edge
+    rev_pair_id: np.ndarray     # [m] pair id of (dst,src) or -1
+    pair_pos_out: np.ndarray    # [m] position of pair-CSR slot k inside out-CSR
+    pair_pos_in: np.ndarray     # [m] ditto inside in-CSR
+    # inverse permutations: position of edge e inside each CSR
+    out_pos_of_edge: np.ndarray
+    in_pos_of_edge: np.ndarray
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_edges(src: np.ndarray, dst: np.ndarray, t: np.ndarray,
+                   relabel: bool = True) -> "TemporalGraph":
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        t = np.asarray(t, dtype=np.int64)
+        if not (len(src) == len(dst) == len(t)):
+            raise ValueError("edge array length mismatch")
+        m = len(src)
+        if m == 0:
+            raise ValueError("empty graph")
+        if np.any(src == dst):
+            raise ValueError("self-loops not supported (match prior work)")
+        if relabel:
+            verts, inv = np.unique(np.concatenate([src, dst]), return_inverse=True)
+            src = inv[:m].astype(np.int32)
+            dst = inv[m:].astype(np.int32)
+            n = len(verts)
+        else:
+            src = src.astype(np.int32)
+            dst = dst.astype(np.int32)
+            n = int(max(src.max(), dst.max())) + 1
+        t = t - t.min()
+
+        # enforce unique (u, v, t) tuples (paper's input model)
+        tup = np.stack([src.astype(np.int64), dst.astype(np.int64), t], axis=1)
+        uniq = np.unique(tup, axis=0)
+        if len(uniq) != m:
+            keep_idx = np.unique(
+                src.astype(np.int64) * (n * (t.max() + 1))
+                + dst.astype(np.int64) * (t.max() + 1) + t,
+                return_index=True)[1]
+            src, dst, t = src[keep_idx], dst[keep_idx], t[keep_idx]
+            m = len(src)
+
+        # global sort by (t, src, dst) — gives stable edge ids
+        order = np.lexsort((dst, src, t))
+        src, dst, t = src[order], dst[order], t[order]
+        eid = np.arange(m, dtype=np.int32)
+
+        def csr(group: np.ndarray, size: int):
+            o = np.lexsort((eid, t, group))  # (group, t, id): time-sorted in-seg
+            ptr = np.zeros(size + 1, dtype=np.int64)
+            np.add.at(ptr, group.astype(np.int64) + 1, 1)
+            np.cumsum(ptr, out=ptr)
+            return ptr, eid[o].astype(np.int32), t[o]
+
+        out_ptr, out_edge, out_t = csr(src, n)
+        in_ptr, in_edge, in_t = csr(dst, n)
+
+        # pair-CSR
+        pkey = src.astype(np.int64) * n + dst.astype(np.int64)
+        uniq_pairs, pair_id = np.unique(pkey, return_inverse=True)
+        P = len(uniq_pairs)
+        pair_ptr, pair_edge, pair_t = csr(pair_id.astype(np.int32), P)
+        # reverse pair lookup
+        rkey = dst.astype(np.int64) * n + src.astype(np.int64)
+        ridx = np.searchsorted(uniq_pairs, rkey)
+        ridx_clip = np.clip(ridx, 0, P - 1)
+        rev_pair_id = np.where(uniq_pairs[ridx_clip] == rkey, ridx_clip, -1
+                               ).astype(np.int32)
+
+        out_pos_of_edge = np.empty(m, dtype=np.int64)
+        out_pos_of_edge[out_edge] = np.arange(m)
+        in_pos_of_edge = np.empty(m, dtype=np.int64)
+        in_pos_of_edge[in_edge] = np.arange(m)
+        pair_pos_out = out_pos_of_edge[pair_edge]
+        pair_pos_in = in_pos_of_edge[pair_edge]
+
+        return TemporalGraph(
+            n=n, m=m, src=src, dst=dst, t=t,
+            out_ptr=out_ptr, out_edge=out_edge, out_t=out_t,
+            in_ptr=in_ptr, in_edge=in_edge, in_t=in_t,
+            num_pairs=P, pair_key=uniq_pairs, pair_ptr=pair_ptr,
+            pair_edge=pair_edge, pair_t=pair_t,
+            pair_id=pair_id.astype(np.int32), rev_pair_id=rev_pair_id,
+            pair_pos_out=pair_pos_out, pair_pos_in=pair_pos_in,
+            out_pos_of_edge=out_pos_of_edge, in_pos_of_edge=in_pos_of_edge)
+
+    # ------------------------------------------------------------------
+    @property
+    def time_span(self) -> int:
+        return int(self.t[-1])
+
+    def num_subgraphs(self, delta: int) -> int:
+        """Number of 2*delta overlapping windows [i*d, (i+2)*d), i in [0, q)."""
+        return max(1, -(-int(self.t[-1] + 1) // int(delta)) - 1)
+
+    def max_multiplicity(self, delta: int) -> int:
+        """sigma_delta — max #edges between an ordered pair within any delta window."""
+        best = 1
+        for p in range(self.num_pairs):
+            seg = self.pair_t[self.pair_ptr[p]:self.pair_ptr[p + 1]]
+            if len(seg) <= best:
+                continue
+            j = np.searchsorted(seg, seg - delta, side="left")
+            best = max(best, int((np.arange(len(seg)) - j + 1).max()))
+        return best
+
+    def device_arrays(self, dtype: Any = None) -> dict[str, Any]:
+        """Ship index structure to jax device arrays (int32 where safe)."""
+        import jax.numpy as jnp
+        use64 = bool(jnp.array(0, dtype=jnp.int64).dtype == jnp.int64)
+        it = jnp.int64 if use64 else jnp.int32
+        if not use64 and self.time_span > 2**30:
+            raise ValueError("enable jax x64 for graphs with time span > 2^30")
+        d = dict(
+            src=jnp.asarray(self.src), dst=jnp.asarray(self.dst),
+            t=jnp.asarray(self.t, dtype=it),
+            out_ptr=jnp.asarray(self.out_ptr, dtype=it),
+            out_edge=jnp.asarray(self.out_edge),
+            out_t=jnp.asarray(self.out_t, dtype=it),
+            in_ptr=jnp.asarray(self.in_ptr, dtype=it),
+            in_edge=jnp.asarray(self.in_edge),
+            in_t=jnp.asarray(self.in_t, dtype=it),
+            n=jnp.asarray(self.n, dtype=it),
+            pair_key=jnp.asarray(self.pair_key, dtype=jnp.int64 if use64
+                                 else jnp.int32),
+            pair_ptr=jnp.asarray(self.pair_ptr, dtype=it),
+            pair_edge=jnp.asarray(self.pair_edge),
+            pair_t=jnp.asarray(self.pair_t, dtype=it),
+            pair_id=jnp.asarray(self.pair_id),
+            rev_pair_id=jnp.asarray(self.rev_pair_id),
+            pair_pos_out=jnp.asarray(self.pair_pos_out, dtype=it),
+            pair_pos_in=jnp.asarray(self.pair_pos_in, dtype=it),
+        )
+        return d

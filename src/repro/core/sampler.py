@@ -1,0 +1,164 @@
+"""Spanning-tree sampling (paper Alg. 3), vectorized over K samples.
+
+Per Lemma 4.11, every delta-partial match ``phi`` must come out with
+probability exactly ``N_phi / W``.  The sampler is **integer-exact**: all
+CDFs are int64 prefix sums of match counts, random targets are uniform int64
+draws, and positions are found by generalized inverse-CDF bisection — no
+floating-point probability ever enters, so the distribution is exact up to
+the (negligible, < 2^-40) modulo bias of ``jax.random.randint``.
+
+Pipeline per sample (all steps data-parallel over K):
+
+1. window  ``i  ~  W_i / W``          — bisect the window-prefix CDF;
+2. center  ``e0 ~  w_{c,e} / W_i``    — two-piece (own|prev split at the
+   ``(i+1)*wd`` breakpoint) CDF over the window's contiguous edge-id range;
+3. children top-down (static tree schedule): candidate list =
+   alpha-CSR segment of the meet vertex, window-truncated time bounds,
+   minus the parallel-edge pair list (Claim 4.8) — sampled by bisecting
+   ``g(p) = Lambda_prefix(p) - El_prefix(cross(p))`` where ``cross`` is a
+   nested bisection into the pair position sub-sequence.
+"""
+from __future__ import annotations
+
+from ..util import ensure_x64
+
+ensure_x64()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from .bisect import monotone_find, seg_lower_bound, seg_upper_bound  # noqa: E402
+from .spanning_tree import BEFORE, OUT, SpanningTree  # noqa: E402
+
+
+def _two_piece(ps_own, ps_prev, lo, mid):
+    """Cumulative-in-window weight C(p) built from the own/prev split.
+
+    ``C(p) = (PSo[min(p,mid)] - PSo[lo]) + (PSp[max(p,mid)] - PSp[mid])``;
+    positions < mid are in their own window, >= mid in their prev window.
+    """
+    def C(p):
+        return ((ps_own[jnp.minimum(p, mid)] - ps_own[lo])
+                + (ps_prev[jnp.maximum(p, mid)] - ps_prev[mid]))
+    return C
+
+
+def make_sample_fn(tree: SpanningTree, K: int):
+    """Jitted ``fn(dev, wts, key) -> samples`` drawing K partial matches.
+
+    Returns dict with ``edges [K, S]`` (graph edge id per tree-local edge),
+    ``window [K]`` and ``phi_v [K, |V|]`` (the vertex map).
+    """
+    S = tree.num_edges
+    nv = tree.motif.num_vertices
+
+    def fn(dev, wts, key):
+        t = dev["t"]
+        # adaptive bisection depth: ceil(log2(m))+1 covers any segment of
+        # the m-edge graph (vs the conservative fixed 40 — §Perf C1).
+        # REPRO_BISECT_ITERS overrides (A/B tuning).
+        import os as _os
+        it = int(_os.environ.get("REPRO_BISECT_ITERS", 0)) or max(
+            8, int(t.shape[0]).bit_length() + 1)
+        delta = jnp.asarray(wts.delta, jnp.int64)
+        wd = jnp.asarray(wts.wd, jnp.int64)
+        r = tree.root
+        keys = jax.random.split(key, S + 2)
+
+        # -- 1. window ---------------------------------------------------
+        W = jnp.maximum(wts.W_total, 1)
+        x = jax.random.randint(keys[0], (K,), 0, W, dtype=jnp.int64)
+        itq = max(8, int(wts.q).bit_length() + 1)
+        win = seg_upper_bound(wts.ps_win, jnp.zeros((K,), jnp.int64),
+                              jnp.full((K,), wts.q, jnp.int64), x,
+                              iters=itq) - 1
+        win = jnp.clip(win, 0, wts.q - 1)
+        resid = x - wts.ps_win[win]
+
+        # -- 2. center edge ----------------------------------------------
+        lo = wts.win_lo[win]
+        mid = wts.win_mid[win]
+        hi = wts.win_hi[win]
+        Cc = _two_piece(wts.ps_acc_own[r], wts.ps_acc_prev[r], lo, mid)
+        e0 = monotone_find(lambda p: Cc(p), lo, hi, resid, iters=it)
+
+        edges = [None] * S
+        edges[r] = e0
+
+        # -- 3. children, top-down (static schedule) ----------------------
+        for s in tree.topo_down:
+            e = edges[s]
+            u = dev["src"][e].astype(jnp.int64)
+            v = dev["dst"][e].astype(jnp.int64)
+            te = t[e]
+            for d in tree.deps[s]:
+                c = d.child
+                meet = u if d.meet_end == 0 else v
+                if d.alpha == OUT:
+                    ptr, csr_t = dev["out_ptr"], dev["out_t"]
+                    csr_edge, pair_pos = dev["out_edge"], dev["pair_pos_out"]
+                else:
+                    ptr, csr_t = dev["in_ptr"], dev["in_t"]
+                    csr_edge, pair_pos = dev["in_edge"], dev["pair_pos_in"]
+                p0 = ptr[meet]
+                p1 = ptr[meet + 1]
+                if d.beta == BEFORE:
+                    tlo = jnp.maximum(te - delta, win * wd)
+                    thi = te
+                else:
+                    tlo = te
+                    thi = jnp.minimum(te + delta, (win + 2) * wd - 1)
+                brk = (win + 1) * wd
+                plo = seg_lower_bound(csr_t, p0, p1, tlo, iters=it)
+                phi = seg_upper_bound(csr_t, p0, p1, thi, iters=it)
+                pmid = jnp.clip(seg_lower_bound(csr_t, p0, p1, brk,
+                                                iters=it), plo, phi)
+                CL = _two_piece(wts.ps_acc_own[c], wts.ps_acc_prev[c],
+                                plo, pmid)
+
+                if wts.use_c2:
+                    if d.alpha == OUT:
+                        pid = (dev["pair_id"] if d.meet_end == 0
+                               else dev["rev_pair_id"])[e]
+                    else:
+                        pid = (dev["rev_pair_id"] if d.meet_end == 0
+                               else dev["pair_id"])[e]
+                    pid = pid.astype(jnp.int64)
+                    has = pid >= 0
+                    pid0 = jnp.maximum(pid, 0)
+                    q0 = dev["pair_ptr"][pid0]
+                    q1 = jnp.where(has, dev["pair_ptr"][pid0 + 1], q0)
+                    pt = dev["pair_t"]
+                    qlo = seg_lower_bound(pt, q0, q1, tlo, iters=it)
+                    qhi = seg_upper_bound(pt, q0, q1, thi, iters=it)
+                    qmid = jnp.clip(seg_lower_bound(pt, q0, q1, brk,
+                                                    iters=it), qlo, qhi)
+                    CE = _two_piece(wts.ps_pair_own[c], wts.ps_pair_prev[c],
+                                    qlo, qmid)
+
+                    def g(p, CL=CL, CE=CE, pair_pos=pair_pos, qlo=qlo,
+                          qhi=qhi, it=it):
+                        cross = seg_lower_bound(pair_pos, qlo, qhi, p,
+                                                iters=it)
+                        return CL(p) - CE(cross)
+                else:
+                    def g(p, CL=CL):
+                        return CL(p)
+
+                Wx = g(phi)
+                rx = jax.random.randint(keys[2 + c], (K,), 0,
+                                        jnp.maximum(Wx, 1), dtype=jnp.int64)
+                pstar = monotone_find(g, plo, phi, rx, iters=it)
+                edges[c] = csr_edge[pstar].astype(jnp.int64)
+
+        E = jnp.stack(edges, axis=1)  # [K, S]
+        # vertex map from the static vertex_source table
+        cols = []
+        for vtx in range(nv):
+            s_loc, end = tree.vertex_source[vtx]
+            arr = dev["src"] if end == 0 else dev["dst"]
+            cols.append(arr[E[:, s_loc]].astype(jnp.int64))
+        phi_v = jnp.stack(cols, axis=1)  # [K, nv]
+        return dict(edges=E, window=win, phi_v=phi_v)
+
+    return jax.jit(fn)

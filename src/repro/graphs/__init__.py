@@ -1,0 +1,8 @@
+from .synth import (powerlaw_temporal_graph, er_temporal_graph,
+                    fintxn_temporal_graph)
+from .loader import load_edge_list, save_edge_list
+
+__all__ = [
+    "powerlaw_temporal_graph", "er_temporal_graph", "fintxn_temporal_graph",
+    "load_edge_list", "save_edge_list",
+]

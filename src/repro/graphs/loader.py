@@ -1,0 +1,44 @@
+"""Edge-list IO for temporal graphs.
+
+Text format (SNAP-style): one ``src dst t`` triple per line, '#' comments.
+Binary format: ``.npz`` with src/dst/t arrays (order-of-magnitude faster to
+load; the cache of choice for repeated runs).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from ..core.graph import TemporalGraph
+
+
+def load_edge_list(path: str, cache: bool = True) -> TemporalGraph:
+    """Load ``src dst t`` text or ``.npz``; transparently caches text→npz."""
+    if path.endswith(".npz"):
+        z = np.load(path)
+        return TemporalGraph.from_edges(z["src"], z["dst"], z["t"])
+    npz = path + ".npz"
+    if cache and os.path.exists(npz) and (
+            os.path.getmtime(npz) >= os.path.getmtime(path)):
+        return load_edge_list(npz)
+    data = np.loadtxt(path, dtype=np.int64, comments="#")
+    if data.ndim == 1:
+        data = data[None, :]
+    if data.shape[1] < 3:
+        raise ValueError(f"{path}: need 'src dst t' columns")
+    g = TemporalGraph.from_edges(data[:, 0], data[:, 1], data[:, 2])
+    if cache:
+        try:
+            np.savez_compressed(npz, src=data[:, 0], dst=data[:, 1],
+                                t=data[:, 2])
+        except OSError:
+            pass
+    return g
+
+
+def save_edge_list(g: TemporalGraph, path: str) -> None:
+    if path.endswith(".npz"):
+        np.savez_compressed(path, src=g.src, dst=g.dst, t=g.t)
+    else:
+        np.savetxt(path, np.stack([g.src, g.dst, g.t], axis=1), fmt="%d")

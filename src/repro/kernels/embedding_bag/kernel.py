@@ -1,0 +1,52 @@
+"""EmbeddingBag(sum) Pallas TPU kernel: scalar-prefetch row gather.
+
+Grid ``(B, bag)``: step (b, j) streams embedding row ``idx[b, j]`` from
+the (HBM-resident) table into VMEM via the input BlockSpec's prefetched
+index_map — the canonical TPU embedding-gather pattern; Pallas pipelines
+the next row's DMA behind the current accumulate.  The output block (b's
+bag sum) is revisited across consecutive j steps, so it stays in VMEM and
+is flushed to HBM once per bag.
+
+Padding: idx < 0 marks an empty slot; the wrapper clamps the index to row
+0 and zeroes its weight, so the kernel body is branch-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _eb_kernel(idx_ref, w_ref, row_ref, o_ref):
+    del idx_ref
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += (row_ref[...].astype(jnp.float32)
+                   * w_ref[0, j].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def embedding_bag_padded(table, idx, weights, *, interpret=False):
+    """table [V, d]; idx [B, bag] int32 (>= 0); weights [B, bag] f32."""
+    V, d = table.shape
+    B, bag = idx.shape
+    flat_idx = idx.reshape(-1)
+    return pl.pallas_call(
+        _eb_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, bag),
+            in_specs=[
+                pl.BlockSpec((1, bag), lambda b, j, ix: (b, 0)),
+                pl.BlockSpec((1, d),
+                             lambda b, j, ix, bag=bag: (ix[b * bag + j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda b, j, ix: (b, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
+        interpret=interpret,
+    )(flat_idx, weights, table)

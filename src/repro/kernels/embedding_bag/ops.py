@@ -1,0 +1,22 @@
+"""jit'd wrapper: pad handling (-1 slots) + interpret auto-select."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import embedding_bag_padded
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table, idx, weights=None, *, interpret=None):
+    """table [V, d]; idx [B, bag] int (-1 = empty); weights [B, bag] opt."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, bag = idx.shape
+    w = jnp.ones((B, bag), jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
+    w = jnp.where(idx >= 0, w, 0.0)
+    safe_idx = jnp.maximum(idx, 0).astype(jnp.int32)
+    return embedding_bag_padded(table, safe_idx, w, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: take + masked weighted sum (mirrors models/recsys.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, idx, weights=None):
+    """table [V, d]; idx [B, bag] (-1 pads); weights [B, bag] or None."""
+    valid = idx >= 0
+    rows = table[jnp.maximum(idx, 0)]                  # [B, bag, d]
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    rows = jnp.where(valid[..., None], rows, 0)
+    return rows.sum(axis=1)

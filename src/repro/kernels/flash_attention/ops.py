@@ -1,0 +1,29 @@
+"""jit'd public wrapper: [B, S, H, D] layout in/out, CPU interpret fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "attn_softcap",
+                                   "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, attn_softcap=0.0,
+                    bq=128, bk=256, interpret=None, **_ignored):
+    """q [B, Sq, Hq, D]; k/v [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
+
+    ``interpret=None`` auto-selects interpret mode off-TPU so the same call
+    site runs on CPU tests and TPU deployments.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    ot = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                              attn_softcap=attn_softcap, bq=bq, bk=bk,
+                              interpret=interpret)
+    return ot.transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""jit'd wrapper: query padding + interpret auto-select."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import interval_weight_call
+
+
+@partial(jax.jit, static_argnames=("bq", "interpret"))
+def interval_weight(csr_t, ps_own, ps_prev, p0, p1, tlo, thi, brk, *,
+                    bq: int = 1024, interpret: bool | None = None):
+    """Batched two-piece interval weight sums (see kernel.py).
+
+    Pads the query batch to a ``bq`` multiple with empty segments.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Q = p0.shape[0]
+    bq = min(bq, max(Q, 1))
+    pad = (-Q) % bq
+    if pad:
+        zi = jnp.zeros((pad,), p0.dtype)
+        p0, p1 = jnp.concatenate([p0, zi]), jnp.concatenate([p1, zi])
+        zt = jnp.zeros((pad,), tlo.dtype)
+        tlo = jnp.concatenate([tlo, zt])
+        thi = jnp.concatenate([thi, zt])
+        brk = jnp.concatenate([brk, zt])
+    out = interval_weight_call(csr_t, ps_own, ps_prev, p0, p1, tlo, thi,
+                               brk, bq=bq, interpret=interpret)
+    return out[:Q]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle — the exact formula the weight DP / sampler uses."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.bisect import seg_lower_bound, seg_upper_bound
+
+
+def interval_weight_ref(csr_t, ps_own, ps_prev, p0, p1, tlo, thi, brk):
+    plo = seg_lower_bound(csr_t, p0, p1, tlo)
+    phi = seg_upper_bound(csr_t, p0, p1, thi)
+    pmid = jnp.clip(seg_lower_bound(csr_t, p0, p1, brk), plo, phi)
+    return (ps_own[pmid] - ps_own[plo]) + (ps_prev[phi] - ps_prev[pmid])

@@ -1,0 +1,1 @@
+from .ops import segment_matmul, pad_segments  # noqa: F401

@@ -1,0 +1,44 @@
+"""jit'd wrapper + the segment-padding helper (host/jnp hybrid)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import segment_matmul_padded
+
+
+def pad_segments(x: np.ndarray, group_sizes: np.ndarray, bm: int = 128):
+    """Round each group's row segment up to a multiple of ``bm``.
+
+    Host-side (numpy): returns (x_padded [Mp, K], block_groups [Mp/bm],
+    row_index [Mp] with -1 on pad rows) so outputs can be scattered back.
+    """
+    group_sizes = np.asarray(group_sizes)
+    G = len(group_sizes)
+    starts = np.concatenate([[0], np.cumsum(group_sizes)[:-1]])
+    padded = np.maximum(-(-group_sizes // bm) * bm, 0)
+    Mp = int(padded.sum())
+    row_index = np.full(Mp, -1, dtype=np.int64)
+    block_groups = np.zeros(Mp // bm, dtype=np.int32)
+    pos = 0
+    for g in range(G):
+        n, s = int(group_sizes[g]), int(starts[g])
+        row_index[pos:pos + n] = np.arange(s, s + n)
+        block_groups[pos // bm:(pos + int(padded[g])) // bm] = g
+        pos += int(padded[g])
+    xp = np.zeros((Mp,) + x.shape[1:], dtype=x.dtype)
+    keep = row_index >= 0
+    xp[keep] = np.asarray(x)[row_index[keep]]
+    return xp, block_groups, row_index
+
+
+@partial(jax.jit, static_argnames=("bn", "interpret"))
+def segment_matmul(x, w, block_groups, *, bn=128, interpret=None):
+    """Grouped GEMM on pre-padded rows; see kernel.py for the layout."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return segment_matmul_padded(x, w, block_groups, bn=bn,
+                                 interpret=interpret)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the grouped GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_matmul_ref(x, w, block_groups):
+    """x [M, K], w [G, K, N], block_groups [nblocks]; M % nblocks == 0."""
+    M, K = x.shape
+    nblocks = block_groups.shape[0]
+    bm = M // nblocks
+    row_groups = jnp.repeat(block_groups, bm)          # [M]
+    wg = w[row_groups]                                 # [M, K, N]
+    return jnp.einsum("mk,mkn->mn", x.astype(jnp.float32),
+                      wg.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 256 chips as (data=16, model=16);
+multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16).  The "pod"
+axis extends data parallelism by default and is the pipeline axis when
+pipeline parallelism is enabled (dist/pipeline.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over however many (host) devices exist — tests."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

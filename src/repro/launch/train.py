@@ -1,0 +1,98 @@
+"""Training launcher: any --arch on synthetic data, resumable, on however
+many devices exist (CPU smoke through multi-pod).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --scale smoke --steps 50 --ckpt-dir /tmp/run1
+
+``--scale smoke`` uses the reduced per-arch config (CPU-sized);
+``--scale full`` the assigned config (TPU-sized; expects a real mesh).
+The loop = train/fault_tolerance.run_resumable: checkpoints every
+``--ckpt-every`` steps, resumes from the latest manifest, bounded retry
+then skip-and-log on poisoned batches.
+"""
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import numpy as np
+
+
+def synthetic_batch(cfg, batch_size: int, seq_len: int, step: int):
+    import jax.numpy as jnp
+    r = np.random.default_rng(step)
+    if cfg.family == "lm":
+        tok = r.integers(0, cfg.vocab, size=(batch_size, seq_len + 1))
+        return dict(tokens=jnp.asarray(tok[:, :-1], jnp.int32),
+                    labels=jnp.asarray(tok[:, 1:], jnp.int32),
+                    mask=jnp.ones((batch_size, seq_len), jnp.float32))
+    if cfg.family == "recsys":
+        return dict(
+            dense=jnp.asarray(r.normal(size=(batch_size, cfg.n_dense)),
+                              jnp.float32),
+            sparse=jnp.asarray(
+                r.integers(0, min(cfg.table_sizes), (batch_size,
+                                                     cfg.n_sparse)),
+                jnp.int32),
+            label=jnp.asarray(r.integers(0, 2, batch_size), jnp.float32))
+    raise ValueError(f"synthetic_batch: use family-specific drivers for "
+                     f"{cfg.family}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax
+
+    from ..configs import get_config, get_smoke_config
+    from ..models import recsys, transformer
+    from ..train.fault_tolerance import run_resumable
+    from ..train.optimizer import AdamWConfig, adamw_init
+    from ..train.steps import make_train_step
+
+    cfg = (get_config(args.arch) if args.scale == "full"
+           else get_smoke_config(args.arch))
+    if cfg.family == "lm":
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        loss_fn = partial(transformer.train_loss, cfg)
+    elif cfg.family == "recsys":
+        params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+        loss_fn = partial(recsys.train_loss, cfg)
+    else:
+        raise SystemExit("use examples/motif_features_gnn.py for GNN archs")
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(2, args.steps // 10))
+    step_fn = jax.jit(make_train_step(loss_fn, opt_cfg,
+                                      accum_steps=args.accum))
+    state = dict(params=params, opt=adamw_init(params))
+
+    def do_step(state, batch, step):
+        p, o, metrics = step_fn(state["params"], state["opt"], batch)
+        return dict(params=p, opt=o), {k: float(v)
+                                       for k, v in metrics.items()}
+
+    state, report = run_resumable(
+        do_step, state,
+        next_batch=lambda step, attempt: synthetic_batch(
+            cfg, args.batch, args.seq, step * 1000 + attempt),
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every)
+    losses = [m["loss"] for m in report.metrics]
+    print(f"ran {report.steps_run} steps (resumed_from={report.resumed_from}"
+          f", retries={report.retries}); loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

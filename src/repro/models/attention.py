@@ -1,0 +1,193 @@
+"""Attention: GQA with causal / sliding-window masks, soft-capping, KV cache.
+
+Three execution paths, selected by ``impl``:
+
+* ``"flash"`` (default) — blockwise online-softmax attention written with
+  ``jax.lax.scan`` over query and key/value blocks.  Never materializes the
+  [S, S] score matrix, so 32k-prefill and 500k-decode fit in HBM; XLA sees
+  plain dots (FLOPs visible to ``cost_analysis`` for the roofline).  The
+  inner block fn is ``jax.checkpoint``-ed: the backward pass recomputes
+  score blocks instead of saving them.
+* ``"pallas"`` — the Pallas TPU flash kernel (kernels/flash_attention);
+  numerically validated against "naive" in interpret mode on CPU.
+* ``"naive"`` — the [S, S] reference; small shapes / tests only.
+
+Shapes: q [B, Sq, Hq, D], k/v [B, Skv, Hkv, D]; Hq % Hkv == 0 (GQA).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps bf16/f32 masking NaN-free
+
+
+def _mask(qpos, kpos, causal: bool, window: int) -> jnp.ndarray:
+    """[Sq, Skv] bool: True = attend.  window <= 0 means unbounded."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    return ok
+
+
+def attention_naive(q, k, v, *, causal=True, window=0, attn_softcap=0.0,
+                    q_positions=None, kv_positions=None, kv_len=None):
+    """Reference attention; materializes scores (small shapes only)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qpos = (jnp.arange(Sq) if q_positions is None else q_positions)
+    kpos = (jnp.arange(Skv) if kv_positions is None else kv_positions)
+
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * scale
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    m = _mask(qpos, kpos, causal, window)
+    if kv_len is not None:  # mask unwritten cache slots
+        m &= (kpos < kv_len)[None, :]
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def _flash_inner(carry, blk, *, scale, causal, window, attn_softcap, G):
+    """Online-softmax update for one kv block.
+
+    Block operands stay in their storage dtype (bf16) with f32 MXU
+    accumulation — an f32 cast of q/k/v blocks doubled the measured HBM
+    traffic (§Perf iteration A2); only m/l/acc stats are f32.
+    """
+    acc, m_run, l_run, qg, qpos = carry
+    kb, vb, kpos, kvalid = blk
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    ok &= kvalid[None, :]
+    s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m_run, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_run - m_new)
+    l_new = l_run * corr + p.sum(axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "bqhgk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+        preferred_element_type=jnp.float32)
+    return (acc, m_new, l_new, qg, qpos), None
+
+
+def attention_flash(q, k, v, *, causal=True, window=0, attn_softcap=0.0,
+                    q_block=512, kv_block=1024, q_positions=None,
+                    kv_positions=None, kv_len=None):
+    """Blockwise attention: scan over q blocks, inner scan over kv blocks."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    # pad to block multiples
+    def pad_to(x, blk, axis):
+        pad = (-x.shape[axis]) % blk
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    qpos = (jnp.arange(Sq) if q_positions is None else q_positions)
+    kpos = (jnp.arange(Skv) if kv_positions is None else kv_positions)
+    kvalid = jnp.ones((Skv,), bool) if kv_len is None else (kpos < kv_len)
+
+    qp = pad_to(q, q_block, 1)
+    qposp = pad_to(qpos, q_block, 0)
+    kp, vp = pad_to(k, kv_block, 1), pad_to(v, kv_block, 1)
+    kposp = pad_to(kpos, kv_block, 0)
+    kvalidp = pad_to(kvalid, kv_block, 0)  # padded slots -> False
+    nq = qp.shape[1] // q_block
+    nk = kp.shape[1] // kv_block
+
+    kb = kp.reshape(B, nk, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    kposb = kposp.reshape(nk, kv_block)
+    kvalb = kvalidp.reshape(nk, kv_block)
+
+    inner = partial(_flash_inner, scale=scale, causal=causal,
+                    window=window, attn_softcap=attn_softcap, G=G)
+
+    # Checkpoint the WHOLE per-q-block kv scan, not just the block fn:
+    # checkpointing only the inner body still saved the [nk, B, qb, H, G, D]
+    # f32 carry stack per q block for the backward pass (measured 2.6
+    # TB/step on granite-8b train, §Perf iteration A3); recomputing the kv
+    # scan instead saves only each q block's inputs and output.
+    @jax.checkpoint
+    def per_q_block(qg, qpos_b):
+        acc = jnp.zeros((B, q_block, Hkv, G, D), jnp.float32)
+        m0 = jnp.full((B, q_block, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_block, Hkv, G), jnp.float32)
+        (acc, m_f, l_f, _, _), _ = jax.lax.scan(
+            inner, (acc, m0, l0, qg, qpos_b),
+            (kb, vb, kposb, kvalb))
+        return acc / jnp.maximum(l_f, 1e-30)[..., None]
+
+    qb = qp.reshape(B, nq, q_block, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qposb = qposp.reshape(nq, q_block)
+    ob = jax.lax.map(lambda ab: per_q_block(*ab), (qb, qposb))
+    o = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, -1, Hq, D)[:, :Sq]
+    return o.astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, *, kv_len, window=0,
+                     attn_softcap=0.0):
+    """Single-step decode: q [B, 1, Hq, D] against a [B, S, Hkv, D] cache.
+
+    ``kv_len`` (scalar or [B]) = #valid cache slots; positions are implicit
+    0..kv_len-1, the query sits at kv_len-1 (cache already updated).
+    """
+    B, _, Hq, D = q.shape
+    S = k_cache.shape[1]
+    kv_len = jnp.asarray(kv_len)
+    qpos = (kv_len - 1).reshape(-1)[:, None]          # [B or 1, 1]
+    kpos = jnp.arange(S)[None, :]                     # [1, S]
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    # keep the big cache operands in their storage dtype (bf16) and let the
+    # MXU accumulate in f32 — casting the cache would materialize an f32
+    # copy of the entire [B, S, Hkv, D] cache per layer (2x HBM).
+    qg = q.reshape(B, Hkv, G, D).astype(k_cache.dtype)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl="flash", **kw):
+    if impl == "naive":
+        return attention_naive(q, k, v, **kw)
+    if impl == "flash":
+        return attention_flash(q, k, v, **kw)
+    if impl == "pallas":
+        from ..kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")

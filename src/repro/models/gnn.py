@@ -1,0 +1,369 @@
+"""GNN zoo: GAT, GatedGCN, GraphSAGE, GraphCast — segment-op message passing.
+
+JAX has no sparse-matmul message passing (BCOO only); per the assignment,
+message passing is built from ``jax.ops.segment_sum`` / ``segment_max`` over
+an edge-index -> node scatter.  This IS the system's SpMM/SDDMM layer:
+
+* SpMM   = gather(src features) -> transform -> segment_sum over receivers
+* SDDMM  = gather both endpoints -> per-edge function (GAT logits, gates)
+* softmax-over-in-edges = segment_max (stability) + exp + segment_sum
+
+Graph batches are **static-shape** dicts (padded where needed; pad edges
+point at a trash row that is sliced off):
+
+  full graph:  senders [E], receivers [E], feats [N, F], labels [N],
+               train_mask [N]
+  minibatch:   the padded block format of graphs/neighbor_sampler.py
+  molecule:    feats [B, n, F], senders/receivers [B, E], graph_label [B]
+
+All models expose ``init_params(cfg, d_in, d_out, key)`` and
+``forward(cfg, params, batch)``; losses in ``train_loss``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cast_for_compute, dense_init, layer_norm, softmax_xent
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                   # gat | gatedgcn | sage | graphcast
+    n_layers: int
+    d_hidden: int
+    n_heads: int = 1
+    aggregator: str = "sum"     # sum | mean | max | attn | gated
+    sample_sizes: tuple = ()    # GraphSAGE fanouts
+    mesh_refinement: int = 0    # GraphCast
+    n_vars: int = 0             # GraphCast output channels
+    mesh_ratio: int = 25        # GraphCast: grid nodes per mesh node
+    remat: bool = True
+    remat_group: int = 1        # checkpoint every k layers (sqrt-remat)
+    shard_axes: tuple = ()      # shard_map axes the edge set is sharded over
+    grid_sharded: bool = False  # GraphCast: grid nodes sharded over axes
+    family: str = "gnn"
+
+
+# ---------------------------------------------------------------------------
+# segment-op primitives
+#
+# ``axes`` names shard_map mesh axes the edge set is sharded over: each
+# shard aggregates its local edges, then a psum/pmax combines partial node
+# aggregates — the distributed message-passing layer.  Pad edges use an
+# out-of-range receiver (== n), which jax scatters silently DROP: padding
+# is masked for free.
+# ---------------------------------------------------------------------------
+def seg_sum(x, idx, n, axes=()):
+    s = jax.ops.segment_sum(x, idx, num_segments=n)
+    if axes:
+        s = jax.lax.psum(s, axes)
+    return s
+
+
+def seg_mean(x, idx, n, axes=()):
+    s = seg_sum(x, idx, n, axes)
+    cnt = seg_sum(jnp.ones((x.shape[0], 1), x.dtype), idx, n, axes)
+    return s / jnp.maximum(cnt, 1)
+
+
+def seg_max(x, idx, n, axes=()):
+    s = jax.ops.segment_max(x, idx, num_segments=n)
+    if axes:
+        s = jax.lax.pmax(s, axes)
+    return s
+
+
+def edge_softmax(logits, receivers, n, axes=()):
+    """Per-receiving-node softmax over incoming edges.  logits [E, H]."""
+    # softmax is shift-invariant: the max subtraction carries no gradient
+    # (and pmax has no differentiation rule anyway).
+    mx = seg_max(jax.lax.stop_gradient(logits), receivers, n, axes)
+    safe = jnp.minimum(receivers, n - 1)
+    ex = jnp.exp(logits - mx[safe])
+    den = seg_sum(ex, receivers, n, axes)
+    return ex / jnp.maximum(den[safe], 1e-16)
+
+
+# ---------------------------------------------------------------------------
+# GAT (Velickovic et al., arXiv:1710.10903)
+# ---------------------------------------------------------------------------
+def _gat_layer_params(key, d_in, d_out, heads, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(W=dense_init(k1, (d_in, heads * d_out), dtype=dtype),
+                a_src=dense_init(k2, (heads, d_out), dtype=dtype),
+                a_dst=dense_init(k3, (heads, d_out), dtype=dtype))
+
+
+def _gat_layer(p, h, senders, receivers, n, heads, d_out, concat, axes=()):
+    z = (h @ p["W"]).reshape(-1, heads, d_out)           # [N, H, D]
+    al = jnp.einsum("nhd,hd->nh", z, p["a_src"])          # [N, H]
+    ar = jnp.einsum("nhd,hd->nh", z, p["a_dst"])
+    safe_rcv = jnp.minimum(receivers, n - 1)
+    e = jax.nn.leaky_relu(al[senders] + ar[safe_rcv], 0.2)
+    att = edge_softmax(e, receivers, n, axes)             # [E, H]
+    msg = z[senders] * att[..., None]
+    out = seg_sum(msg.reshape(-1, heads * d_out), receivers, n, axes)
+    if not concat:
+        out = out.reshape(-1, heads, d_out).mean(axis=1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GatedGCN (Dwivedi & Bresson benchmark, arXiv:2003.00982)
+# ---------------------------------------------------------------------------
+def _gatedgcn_layer_params(key, d, dtype):
+    ks = jax.random.split(key, 5)
+    p = {n: dense_init(k, (d, d), dtype=dtype)
+         for n, k in zip("UVABE", ks)}
+    p["ln_h_s"] = jnp.ones((d,), dtype)
+    p["ln_h_b"] = jnp.zeros((d,), dtype)
+    p["ln_e_s"] = jnp.ones((d,), dtype)
+    p["ln_e_b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _gatedgcn_layer(p, h, e, senders, receivers, n, axes=()):
+    """Returns (h', e'): gated message passing with edge-feature state."""
+    e_new = (e @ p["E"] + h[senders] @ p["A"]
+             + h[jnp.minimum(receivers, n - 1)] @ p["B"])
+    eta = jax.nn.sigmoid(e_new)                           # [E, d]
+    msg = eta * (h[senders] @ p["V"])
+    den = seg_sum(eta, receivers, n, axes) + 1e-6
+    agg = seg_sum(msg, receivers, n, axes) / den
+    h_new = h @ p["U"] + agg
+    h = h + jax.nn.relu(layer_norm(h_new, p["ln_h_s"], p["ln_h_b"]))
+    e = e + jax.nn.relu(layer_norm(e_new, p["ln_e_s"], p["ln_e_b"]))
+    return h, e
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE (Hamilton et al., arXiv:1706.02216), mean aggregator
+# ---------------------------------------------------------------------------
+def _sage_layer_params(key, d_in, d_out, dtype):
+    k1, k2 = jax.random.split(key)
+    return dict(W_self=dense_init(k1, (d_in, d_out), dtype=dtype),
+                W_neigh=dense_init(k2, (d_in, d_out), dtype=dtype))
+
+
+def _sage_layer(p, h_dst, h_src, senders, receivers, n_dst, axes=()):
+    """Bipartite-friendly: dst nodes aggregate from src-node neighbours."""
+    agg = seg_mean(h_src[senders], receivers, n_dst, axes)
+    return h_dst @ p["W_self"] + agg @ p["W_neigh"]
+
+
+# ---------------------------------------------------------------------------
+# GraphCast (Lam et al., arXiv:2212.12794): encoder-processor-decoder
+# ---------------------------------------------------------------------------
+def _mlp_params(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [dict(W=dense_init(k, (a, b), dtype=dtype),
+                 b=jnp.zeros((b,), dtype))
+            for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:]))]
+
+
+def _mlp(ps, x):
+    for i, p in enumerate(ps):
+        x = x @ p["W"] + p["b"]
+        if i < len(ps) - 1:
+            x = jax.nn.silu(x)
+    return x
+
+
+def _interaction_params(key, d, dtype):
+    k1, k2 = jax.random.split(key)
+    return dict(edge_mlp=_mlp_params(k1, (3 * d, d, d), dtype),
+                node_mlp=_mlp_params(k2, (2 * d, d, d), dtype))
+
+
+def _interaction(p, h_src, h_dst, e, senders, receivers, n_dst, axes=()):
+    """Interaction-network block (GraphCast processor/enc/dec unit)."""
+    rcv_safe = jnp.minimum(receivers, n_dst - 1)
+    e_in = jnp.concatenate([e, h_src[senders], h_dst[rcv_safe]], axis=-1)
+    e_new = e + _mlp(p["edge_mlp"], e_in)
+    agg = seg_sum(e_new, receivers, n_dst, axes)
+    h_new = h_dst + _mlp(p["node_mlp"],
+                         jnp.concatenate([h_dst, agg], axis=-1))
+    return h_new, e_new
+
+
+# ---------------------------------------------------------------------------
+# model-level init / forward
+# ---------------------------------------------------------------------------
+def init_params(cfg: GNNConfig, d_in: int, d_out: int, key,
+                dtype=jnp.float32) -> dict:
+    ks = iter(jax.random.split(key, cfg.n_layers + 8))
+    d = cfg.d_hidden
+    if cfg.kind == "gat":
+        layers = [_gat_layer_params(next(ks), d_in, d, cfg.n_heads, dtype)]
+        for _ in range(cfg.n_layers - 2):
+            layers.append(_gat_layer_params(next(ks), cfg.n_heads * d, d,
+                                            cfg.n_heads, dtype))
+        layers.append(_gat_layer_params(next(ks), cfg.n_heads * d, d_out,
+                                        cfg.n_heads, dtype))
+        return dict(layers=layers)
+    if cfg.kind == "gatedgcn":
+        return dict(
+            embed_h=dense_init(next(ks), (d_in, d), dtype=dtype),
+            embed_e=dense_init(next(ks), (1, d), dtype=dtype),
+            layers=[_gatedgcn_layer_params(next(ks), d, dtype)
+                    for _ in range(cfg.n_layers)],
+            readout=dense_init(next(ks), (d, d_out), dtype=dtype))
+    if cfg.kind == "sage":
+        dims = [d_in] + [d] * (cfg.n_layers - 1) + [d_out]
+        return dict(layers=[_sage_layer_params(next(ks), a, b, dtype)
+                            for a, b in zip(dims[:-1], dims[1:])])
+    if cfg.kind == "graphcast":
+        return dict(
+            embed_grid=_mlp_params(next(ks), (d_in, d, d), dtype),
+            embed_mesh=_mlp_params(next(ks), (d_in, d, d), dtype),
+            embed_e_g2m=_mlp_params(next(ks), (1, d, d), dtype),
+            embed_e_mesh=_mlp_params(next(ks), (1, d, d), dtype),
+            embed_e_m2g=_mlp_params(next(ks), (1, d, d), dtype),
+            g2m=_interaction_params(next(ks), d, dtype),
+            processor=[_interaction_params(next(ks), d, dtype)
+                       for _ in range(cfg.n_layers)],
+            m2g=_interaction_params(next(ks), d, dtype),
+            readout=_mlp_params(next(ks), (d, d, d_out), dtype))
+    raise ValueError(cfg.kind)
+
+
+def forward(cfg: GNNConfig, params: dict, batch: dict,
+            compute_dtype=jnp.float32) -> jnp.ndarray:
+    """Dispatch on cfg.kind and the batch's structure; returns node/graph out."""
+    params = cast_for_compute(params, compute_dtype)
+    if cfg.kind == "graphcast":
+        return _forward_graphcast(cfg, params, batch)
+    if "blocks" in batch:
+        return _forward_minibatch(cfg, params, batch)
+    h = batch["feats"].astype(compute_dtype)
+    snd, rcv = batch["senders"], batch["receivers"]
+    n = h.shape[0]
+
+    ax = cfg.shard_axes
+    if cfg.kind == "gat":
+        L = len(params["layers"])
+        for i, p in enumerate(params["layers"]):
+            last = i == L - 1
+            d_out = p["a_src"].shape[1]
+            h = _gat_layer(p, h, snd, rcv, n, cfg.n_heads, d_out,
+                           concat=not last, axes=ax)
+            if not last:
+                h = jax.nn.elu(h)
+        return h
+    if cfg.kind == "gatedgcn":
+        h = h @ params["embed_h"]
+        e = jnp.ones((snd.shape[0], 1), h.dtype) @ params["embed_e"]
+
+        def group(h, e, ps):
+            for p in ps:
+                h, e = _gatedgcn_layer(p, h, e, snd, rcv, n, ax)
+            return h, e
+
+        if cfg.remat:
+            group = jax.checkpoint(group)
+        g = max(1, cfg.remat_group)
+        ls = params["layers"]
+        for i in range(0, len(ls), g):
+            h, e = group(h, e, ls[i:i + g])
+        return h @ params["readout"]
+    if cfg.kind == "sage":
+        L = len(params["layers"])
+        for i, p in enumerate(params["layers"]):
+            h_new = _sage_layer(p, h, h, snd, rcv, n, ax)
+            h = jax.nn.relu(h_new) if i < L - 1 else h_new
+        return h
+    raise ValueError(cfg.kind)
+
+
+def _forward_minibatch(cfg: GNNConfig, params: dict, batch: dict):
+    """Layered blocks from the neighbor sampler (deepest block first).
+
+    blocks[i] = dict(senders, receivers) — indices into the shared node
+    table; feats [N_table, F].  Block i's dst count is **shape-derived**
+    (receivers has exactly n_dst * fanout entries, fanout from
+    cfg.sample_sizes reversed) so it stays static under jit.
+    """
+    h = batch["feats"]
+    blocks = batch["blocks"]
+    assert cfg.kind == "sage", "minibatch blocks are a GraphSAGE path"
+    fanouts = tuple(reversed(cfg.sample_sizes))
+    L = len(params["layers"])
+    for i, (p, blk) in enumerate(zip(params["layers"], blocks)):
+        n_dst = blk["receivers"].shape[0] // fanouts[i]
+        h_new = _sage_layer(p, h[:n_dst], h, blk["senders"],
+                            blk["receivers"], n_dst)
+        h = jax.nn.relu(h_new) if i < L - 1 else h_new
+    return h
+
+
+def _forward_graphcast(cfg: GNNConfig, params: dict, batch: dict):
+    """Encoder (grid->mesh), processor (mesh), decoder (mesh->grid).
+
+    ``mesh_feats`` [n_mesh, F] (structural mesh-node features) both feeds
+    the mesh embedder and fixes n_mesh statically from its shape.
+    """
+    d = cfg.d_hidden
+    ax = cfg.shard_axes
+    # When grid nodes are sharded (cfg.grid_sharded under shard_map), grid
+    # arrays/edges are per-shard slices with LOCAL grid indices; mesh state
+    # is replicated, so g2m/mesh aggregations psum while m2g stays local.
+    hg = _mlp(params["embed_grid"], batch["feats"])       # [Ng(_loc), d]
+    hm = _mlp(params["embed_mesh"], batch["mesh_feats"])  # [Nm, d]
+    n_mesh = hm.shape[0]
+    ones = jnp.ones((batch["g2m_senders"].shape[0], 1), hg.dtype)
+    e_g2m = _mlp(params["embed_e_g2m"], ones)
+    hm, _ = _interaction(params["g2m"], hg, hm, e_g2m,
+                         batch["g2m_senders"], batch["g2m_receivers"],
+                         n_mesh, ax)
+    e_m = _mlp(params["embed_e_mesh"],
+               jnp.ones((batch["mesh_senders"].shape[0], 1), hg.dtype))
+
+    def group(hm, e_m, ps):
+        for p in ps:
+            hm, e_m = _interaction(p, hm, hm, e_m, batch["mesh_senders"],
+                                   batch["mesh_receivers"], n_mesh, ax)
+        return hm, e_m
+
+    if cfg.remat:
+        group = jax.checkpoint(group)
+    g = max(1, cfg.remat_group)
+    ls = params["processor"]
+    for i in range(0, len(ls), g):
+        hm, e_m = group(hm, e_m, ls[i:i + g])
+    e_m2g = _mlp(params["embed_e_m2g"],
+                 jnp.ones((batch["m2g_senders"].shape[0], 1), hg.dtype))
+    # decoder: each shard owns its grid rows -> no cross-shard combine
+    hg2, _ = _interaction(params["m2g"], hm, hg, e_m2g,
+                          batch["m2g_senders"], batch["m2g_receivers"],
+                          hg.shape[0], () if cfg.grid_sharded else ax)
+    return _mlp(params["readout"], hg2)
+
+
+def train_loss(cfg: GNNConfig, params: dict, batch: dict) -> jnp.ndarray:
+    if "feats_batched" in batch:  # molecule: vmap over graphs
+        def one(feats, snd, rcv, y):
+            b2 = dict(feats=feats, senders=snd, receivers=rcv)
+            if cfg.kind == "graphcast":
+                b2.update({k: batch[k] for k in
+                           ("mesh_feats", "g2m_senders", "g2m_receivers",
+                            "mesh_senders", "mesh_receivers",
+                            "m2g_senders", "m2g_receivers")})
+            out = forward(cfg, params, b2)
+            pred = out.mean(axis=0)  # graph-level readout
+            return jnp.mean((pred - y) ** 2)
+        losses = jax.vmap(one, in_axes=(0, 0, 0, 0))(
+            batch["feats_batched"], batch["senders_b"], batch["receivers_b"],
+            batch["graph_label"])
+        return losses.mean()
+    out = forward(cfg, params, batch)
+    if cfg.kind == "graphcast":
+        return jnp.mean((out - batch["target"]) ** 2)
+    labels = batch["labels"]
+    mask = batch.get("train_mask")
+    if out.shape[0] != labels.shape[0]:   # minibatch: seeds only
+        out = out[:labels.shape[0]]
+    return softmax_xent(out, labels, mask)

@@ -1,0 +1,164 @@
+"""Shared NN building blocks: norms, RoPE, MLPs, inits, losses.
+
+Conventions used across the model zoo:
+
+* params are plain pytrees (dicts of jnp arrays) — no framework;
+* per-layer parameters are **stacked on a leading [L] axis** so the
+  transformer blocks run under ``jax.lax.scan`` (one compiled layer body,
+  small HLO, fast multi-pod compiles);
+* compute dtype is bf16 (TPU MXU native), master params f32 — the cast
+  happens at use sites via ``cast_for_compute``;
+* every init takes an explicit ``key`` and is deterministic.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+def cast_for_compute(params: Pytree, dtype=jnp.bfloat16) -> Pytree:
+    """Cast float params to the compute dtype (ints/bools untouched)."""
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(c, params)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             zero_centered: bool = True) -> jnp.ndarray:
+    """RMSNorm in f32 (stability), output in x.dtype.
+
+    ``zero_centered`` follows Gemma: weight is stored as (scale - 1) so that
+    zero-init == identity.  Llama-family stores the scale directly; both are
+    supported by the flag.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if zero_centered:
+        w = w + 1.0
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    """Inverse frequencies [head_dim//2] (f32)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) by position-dependent angles.
+
+    x: [..., S, H, D]; positions: broadcastable to [..., S].  Uses the
+    split-half convention (Llama / NeoX style).
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                      # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    ang = ang[..., None, :]                               # [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / caps
+# ---------------------------------------------------------------------------
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(x @ w_gate)
+    u = x @ w_up
+    return (g * u) @ w_down
+
+
+def geglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+          w_down: jnp.ndarray) -> jnp.ndarray:
+    """GeGLU MLP (Gemma): down( gelu(x @ gate) * (x @ up) )."""
+    g = gelu(x @ w_gate)
+    u = x @ w_up
+    return (g * u) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# inits
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (stddev = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (std * jax.random.truncated_normal(key, -3, 3, shape)
+            ).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def stacked(init_fn, key, n: int, shape, **kw):
+    """Stack ``n`` independent inits on a leading axis — scan-layer params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, shape, **kw))(keys)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None,
+                 z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean cross-entropy in f32, optional z-loss regularizer.
+
+    logits: [..., V] (any float dtype); labels int [...]; mask broadcastable
+    to labels (1 = count the token).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    if mask is None:
+        return loss.mean()
+    mask = mask.astype(jnp.float32)
+    return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def count_params(params: Pytree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

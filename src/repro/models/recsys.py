@@ -1,0 +1,158 @@
+"""DCN-v2 (Wang et al., arXiv:2008.13535) with a sharded EmbeddingBag.
+
+JAX has no native EmbeddingBag / CSR sparse — the lookup here is built from
+``jnp.take`` + ``jax.ops.segment_sum`` (multi-hot bags) and IS part of the
+system.  All sparse tables are **concatenated into one row-sharded array**
+``table [V_total, d_emb]`` with per-feature row offsets, so sharding is a
+single NamedSharding rule (rows mod "model") and the lookup is one gather.
+
+Model: x0 = [dense_feats || concat(bag outputs)]; cross layers
+``x_{l+1} = x0 * (W x_l + b) + x_l`` (full-rank DCN-v2); MLP tower; logit.
+
+``serve_retrieval`` scores 1M candidates with a batched dot — the user
+tower output is projected to d_emb and dotted against candidate embedding
+rows (two-tower style sharing the sparse table).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cast_for_compute, dense_init
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp: tuple = (1024, 1024, 512)
+    table_sizes: tuple = ()        # one vocab size per sparse feature
+    bag_size: int = 1              # multi-hot width (1 = one-hot)
+    family: str = "recsys"
+
+    @property
+    def v_total(self) -> int:
+        """Concatenated rows, padded to a 4096 multiple so the row-sharded
+        table divides any production mesh (pad rows are never indexed)."""
+        v = sum(self.table_sizes)
+        return -(-v // 4096) * 4096
+
+    @property
+    def d_interact(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    def param_count(self) -> int:
+        D = self.d_interact
+        cross = self.n_cross_layers * (D * D + D)
+        dims = (D,) + self.mlp
+        mlp = sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        head = self.mlp[-1] + 1
+        proj = self.mlp[-1] * self.embed_dim
+        return self.v_total * self.embed_dim + cross + mlp + head + proj
+
+
+def table_offsets(cfg: RecsysConfig) -> jnp.ndarray:
+    """Row offset of each feature's slice inside the concatenated table."""
+    import numpy as np
+    return jnp.asarray(np.concatenate([[0], np.cumsum(cfg.table_sizes)[:-1]]),
+                       jnp.int32)
+
+
+def init_params(cfg: RecsysConfig, key, dtype=jnp.float32) -> dict:
+    ks = iter(jax.random.split(key, 8 + cfg.n_cross_layers + len(cfg.mlp)))
+    D = cfg.d_interact
+    table = (jax.random.normal(next(ks), (cfg.v_total, cfg.embed_dim))
+             * 0.01).astype(dtype)
+    cross = [dict(W=dense_init(next(ks), (D, D), dtype=dtype),
+                  b=jnp.zeros((D,), dtype))
+             for _ in range(cfg.n_cross_layers)]
+    dims = (D,) + cfg.mlp
+    mlp = [dict(W=dense_init(next(ks), (a, b), dtype=dtype),
+                b=jnp.zeros((b,), dtype))
+           for a, b in zip(dims[:-1], dims[1:])]
+    head = dict(W=dense_init(next(ks), (cfg.mlp[-1], 1), dtype=dtype),
+                b=jnp.zeros((1,), dtype))
+    proj = dense_init(next(ks), (cfg.mlp[-1], cfg.embed_dim), dtype=dtype)
+    return dict(table=table, cross=cross, mlp=mlp, head=head,
+                retrieval_proj=proj)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag: take + segment_sum
+# ---------------------------------------------------------------------------
+def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray,
+                  weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """idx [..., bag] (rows of ``table``; -1 = padding) -> sum over bag.
+
+    Equivalent to torch EmbeddingBag(mode='sum') with per-sample weights.
+    The -1 padding is masked (gather clamps, contribution zeroed).
+    """
+    valid = idx >= 0
+    rows = table[jnp.maximum(idx, 0)]                   # [..., bag, d]
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    rows = jnp.where(valid[..., None], rows, 0)
+    return rows.sum(axis=-2)
+
+
+def sparse_features(cfg: RecsysConfig, params: dict,
+                    sparse_idx: jnp.ndarray) -> jnp.ndarray:
+    """sparse_idx [B, n_sparse(, bag)] per-feature local ids -> [B, F*d]."""
+    if sparse_idx.ndim == 2:
+        sparse_idx = sparse_idx[..., None]
+    off = table_offsets(cfg)                             # [F]
+    gid = jnp.where(sparse_idx >= 0,
+                    sparse_idx + off[None, :, None], -1)
+    emb = embedding_bag(params["table"], gid)            # [B, F, d]
+    return emb.reshape(emb.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# forward / losses
+# ---------------------------------------------------------------------------
+def _tower(cfg: RecsysConfig, params: dict, dense: jnp.ndarray,
+           sparse_idx: jnp.ndarray) -> jnp.ndarray:
+    """Shared DCN-v2 stack up to the top MLP output [B, mlp[-1]]."""
+    emb = sparse_features(cfg, params, sparse_idx)
+    x0 = jnp.concatenate([dense.astype(emb.dtype), emb], axis=-1)
+    x = x0
+    for p in params["cross"]:
+        x = x0 * (x @ p["W"] + p["b"]) + x
+    for p in params["mlp"]:
+        x = jax.nn.relu(x @ p["W"] + p["b"])
+    return x
+
+
+def forward(cfg: RecsysConfig, params: dict, batch: dict,
+            compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """CTR logits [B]."""
+    params = cast_for_compute(params, compute_dtype)
+    x = _tower(cfg, params, batch["dense"], batch["sparse"])
+    p = params["head"]
+    return (x @ p["W"] + p["b"])[..., 0]
+
+
+def train_loss(cfg: RecsysConfig, params: dict, batch: dict) -> jnp.ndarray:
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def serve_retrieval(cfg: RecsysConfig, params: dict, batch: dict,
+                    compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """One query vs n_candidates item rows: scores [n_candidates].
+
+    batch = {dense [1, 13], sparse [1, 26], cand_ids [n_cand]} where
+    cand_ids index the item feature's slice of the shared table.
+    """
+    params = cast_for_compute(params, compute_dtype)
+    x = _tower(cfg, params, batch["dense"], batch["sparse"])   # [1, mlp-1]
+    u = x @ params["retrieval_proj"]                           # [1, d_emb]
+    cand = params["table"][batch["cand_ids"]]                  # [C, d_emb]
+    return (cand @ u[0]).astype(jnp.float32)

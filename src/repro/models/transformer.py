@@ -1,0 +1,406 @@
+"""Decoder-only LM: dense + MoE, GQA, local/global alternation, KV cache.
+
+Design points (all load-bearing for the multi-pod dry-run):
+
+* **scan over layers** with parameters stacked on a leading ``[L]`` axis —
+  one compiled layer body regardless of depth, which keeps HLO small and
+  512-device compiles fast;
+* for Gemma-2-style *alternating* local/global attention the scan runs over
+  ``[L/2]`` with a two-layer body (one local + one global), so the sliding
+  window stays a **static** argument;
+* ``train_loss`` / ``prefill`` / ``decode_step`` are the three entry points
+  the launcher lowers; all take params as inputs (ShapeDtypeStruct-friendly);
+* MoE layers plug in via models/moe.py (gather-based dispatch, EP-shardable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from .attention import attention_decode, attention_flash, attention_naive
+from .layers import (apply_rope, cast_for_compute, dense_init, embed_init,
+                     rms_norm, softcap, softmax_xent, stacked, swiglu)
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                   # 0 -> d_model // n_heads
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    n_experts_padded: int = 0   # pad experts so EP divides the mesh; the
+                                # router never routes to pads (exact match)
+    top_k: int = 0
+    d_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # gemma2-style features
+    sliding_window: int = 0             # >0 enables local attention
+    alt_local_global: bool = False      # alternate local/global layers
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    query_scale: float = 0.0            # 0 -> 1/sqrt(head_dim)
+    scale_embed: bool = False           # x *= sqrt(d_model) after embed
+    post_norms: bool = False            # extra post-attn/post-mlp norms
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    # execution
+    attn_impl: str = "flash"            # flash | naive | pallas
+    remat: bool = True
+    # Megatron-style sequence-parallel residual stream: PartitionSpec (as a
+    # tuple) applied to the [B, S, d] carry at every layer boundary, e.g.
+    # (("pod", "data"), "model", None).  None disables.  Requires a mesh
+    # context (the launcher's ``with mesh:``).
+    residual_spec: tuple | None = None
+    family: str = "lm"
+
+    def __post_init__(self):
+        assert self.n_heads % self.n_kv_heads == 0
+        if self.alt_local_global:
+            assert self.n_layers % 2 == 0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def e_pad(self) -> int:
+        return max(self.n_experts_padded, self.n_experts)
+
+    def param_count(self) -> int:
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.is_moe:
+            mlp = (d * self.n_experts
+                   + 3 * d * self.d_expert * self.n_experts
+                   + 3 * d * self.d_expert * self.n_shared_experts)
+        else:
+            mlp = 3 * d * ff
+        norms = d * (4 if self.post_norms else 2)
+        per_layer = attn + mlp + norms
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        attn = d * self.hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        mlp = (d * self.n_experts
+               + 3 * d * self.d_expert * (self.top_k + self.n_shared_experts))
+        norms = d * (4 if self.post_norms else 2)
+        per_layer = attn + mlp + norms
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: LMConfig, key, dtype=jnp.float32) -> dict:
+    """Master (f32 by default) parameters; per-layer arrays stacked on [L]."""
+    k = iter(jax.random.split(key, 24))
+    L, d, hd = cfg.n_layers, cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    lay: dict[str, Any] = dict(
+        attn_norm=jnp.zeros((L, d), dtype),
+        wq=stacked(dense_init, next(k), L, (d, Hq * hd), dtype=dtype),
+        wk=stacked(dense_init, next(k), L, (d, Hkv * hd), dtype=dtype),
+        wv=stacked(dense_init, next(k), L, (d, Hkv * hd), dtype=dtype),
+        wo=stacked(dense_init, next(k), L, (Hq * hd, d), dtype=dtype),
+        mlp_norm=jnp.zeros((L, d), dtype),
+    )
+    if cfg.post_norms:
+        lay["post_attn_norm"] = jnp.zeros((L, d), dtype)
+        lay["post_mlp_norm"] = jnp.zeros((L, d), dtype)
+    if cfg.is_moe:
+        lay.update(moe_lib.init_moe_params(cfg, next(k), dtype))
+    else:
+        lay.update(
+            w_gate=stacked(dense_init, next(k), L, (d, cfg.d_ff), dtype=dtype),
+            w_up=stacked(dense_init, next(k), L, (d, cfg.d_ff), dtype=dtype),
+            w_down=stacked(dense_init, next(k), L, (cfg.d_ff, d), dtype=dtype),
+        )
+    params = dict(embed=embed_init(next(k), (cfg.vocab, d), dtype),
+                  final_norm=jnp.zeros((d,), dtype), layers=lay)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(next(k), (d, cfg.vocab), dtype=dtype)
+    return params
+
+
+def abstract_params(cfg: LMConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (dry-run input, no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0),
+                                              dtype))
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+def _qkv_constraints(cfg: LMConfig, q, kk, vv):
+    """Under SP residuals, force ONE seq all-gather of q/k/v per layer.
+
+    Without this, flash attention\'s per-block dynamic-slices over the
+    seq-sharded k/v re-gather the same tensors nq x nk times per layer
+    (measured +21 s collective term on granite-8b train, EXPERIMENTS
+    section Perf).  q stays head-sharded over "model" when Hq divides;
+    k/v replicate over "model" (GQA kv heads rarely divide — their
+    projections are small).
+    """
+    if cfg.residual_spec is None:
+        return q, kk, vv
+    from jax.sharding import PartitionSpec
+    batch_ax = cfg.residual_spec[0]
+    wsc = jax.lax.with_sharding_constraint
+    qspec = "model" if cfg.n_heads % 16 == 0 else None
+    q = wsc(q, PartitionSpec(batch_ax, None, qspec, None))
+    kk = wsc(kk, PartitionSpec(batch_ax, None, None, None))
+    vv = wsc(vv, PartitionSpec(batch_ax, None, None, None))
+    return q, kk, vv
+
+
+def _h_gather(cfg: LMConfig, h):
+    """SP block entry: all-gather the normed activations over "model".
+
+    Leaving h seq-sharded makes every weight-grad contraction (over the
+    sharded seq dim) a FULL-SIZE per-microbatch all-reduce across "model"
+    (measured 810 GB/step on granite-8b train, §Perf A4); gathering h once
+    per block (37 GB/step) lets each shard compute exactly its own grad
+    columns — the standard Megatron-SP gather/reduce-scatter pairing.
+    """
+    if cfg.residual_spec is None:
+        return h
+    from jax.sharding import PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        h, PartitionSpec(cfg.residual_spec[0], None, None))
+
+
+def _attn_block(cfg: LMConfig, x, p, window: int, positions):
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = _h_gather(cfg, rms_norm(x, p["attn_norm"]))
+    q = (h @ p["wq"]).reshape(B, S, Hq, hd)
+    kk = (h @ p["wk"]).reshape(B, S, Hkv, hd)
+    vv = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    kk = apply_rope(kk, positions, cfg.rope_theta)
+    q, kk, vv = _qkv_constraints(cfg, q, kk, vv)
+    if cfg.query_scale:
+        q = q * (cfg.query_scale * hd ** 0.5)  # fold custom scale into q
+    fn = attention_flash if cfg.attn_impl == "flash" else attention_naive
+    o = fn(q, kk, vv, causal=True, window=window,
+           attn_softcap=cfg.attn_softcap, q_positions=positions,
+           kv_positions=positions)
+    o = o.reshape(B, S, Hq * hd) @ p["wo"]
+    o = _constrain(cfg, o)   # SP: TP psum becomes a reduce-scatter
+    if cfg.post_norms:
+        o = rms_norm(o, p["post_attn_norm"])
+    return x + o, (kk, vv)
+
+
+def _mlp_block(cfg: LMConfig, x, p):
+    h = _h_gather(cfg, rms_norm(x, p["mlp_norm"]))
+    if cfg.is_moe:
+        o, aux = moe_lib.moe_mlp(cfg, h, p)
+    else:
+        o = swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    o = _constrain(cfg, o)   # SP: TP psum becomes a reduce-scatter
+    if cfg.post_norms:
+        o = rms_norm(o, p["post_mlp_norm"])
+    return x + o, aux
+
+
+def _constrain(cfg: LMConfig, x):
+    if cfg.residual_spec is None:
+        return x
+    from jax.sharding import PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, PartitionSpec(*cfg.residual_spec))
+
+
+def _layer(cfg: LMConfig, x, p, window: int, positions):
+    x, kv = _attn_block(cfg, x, p, window, positions)
+    x, aux = _mlp_block(cfg, x, p)
+    return _constrain(cfg, x), kv, aux
+
+
+def _windows(cfg: LMConfig) -> tuple[int, ...]:
+    """Static per-slot windows for the scan body (1 or 2 layers per step)."""
+    if cfg.alt_local_global and cfg.sliding_window > 0:
+        return (cfg.sliding_window, 0)     # local, then global
+    if cfg.sliding_window > 0:
+        return (cfg.sliding_window,)
+    return (0,)
+
+
+def _group_layers(cfg: LMConfig, lay: dict) -> dict:
+    """[L, ...] -> [L/g, g, ...] where g = len(_windows(cfg))."""
+    g = len(_windows(cfg))
+    if g == 1:
+        return jax.tree.map(lambda a: a[:, None], lay)
+    return jax.tree.map(lambda a: a.reshape((a.shape[0] // g, g)
+                                            + a.shape[1:]), lay)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def forward(cfg: LMConfig, params: dict, tokens: jnp.ndarray,
+            compute_dtype=jnp.bfloat16):
+    """tokens [B, S] -> (logits [B, S, V] bf16, aux_loss scalar)."""
+    params = cast_for_compute(params, compute_dtype)
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    positions = jnp.arange(S)
+    windows = _windows(cfg)
+    lay = _group_layers(cfg, params["layers"])
+
+    def body(carry, pg):
+        x, aux = carry
+        for j, w in enumerate(windows):
+            pj = jax.tree.map(lambda a: a[j], pg)
+            x, _, a = _layer(cfg, x, pj, w, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    step = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), lay)
+    x = rms_norm(x, params["final_norm"])
+    unemb = params.get("unembed")
+    logits = (x @ unemb) if unemb is not None else (x @ params["embed"].T)
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+def train_loss(cfg: LMConfig, params: dict, batch: dict) -> jnp.ndarray:
+    """batch = {tokens [B,S], labels [B,S], mask [B,S]} -> scalar loss."""
+    logits, aux = forward(cfg, params, batch["tokens"])
+    loss = softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return loss + cfg.router_aux_coef * aux / max(cfg.n_layers, 1)
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: jnp.ndarray,
+            cache_len: int, compute_dtype=jnp.bfloat16):
+    """Run the prompt, return (last-position logits, KV cache dict).
+
+    Cache layout: k/v [L, B, cache_len, Hkv, hd]; ``kv_len`` = S written.
+    """
+    params = cast_for_compute(params, compute_dtype)
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    positions = jnp.arange(S)
+    windows = _windows(cfg)
+    lay = _group_layers(cfg, params["layers"])
+
+    def body(x, pg):
+        kvs = []
+        for j, w in enumerate(windows):
+            pj = jax.tree.map(lambda a: a[j], pg)
+            x, (kk, vv), _ = _layer(cfg, x, pj, w, positions)
+            kvs.append((kk, vv))
+        return x, kvs
+
+    body = jax.checkpoint(body, static_argnums=()) if cfg.remat else body
+    x, kvs = jax.lax.scan(lambda c, pg: body(c, pg), x, lay)
+    # kvs: list over window slots of (k, v) each [L/g, B, S, Hkv, hd]
+    g = len(windows)
+    ks = jnp.stack([kv[0] for kv in kvs], 1).reshape(
+        (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd))
+    vs = jnp.stack([kv[1] for kv in kvs], 1).reshape(
+        (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd))
+    pad = cache_len - S
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = rms_norm(x, params["final_norm"])
+    xl = x[:, -1:]
+    unemb = params.get("unembed")
+    logits = (xl @ unemb) if unemb is not None else (xl @ params["embed"].T)
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    cache = dict(k=ks, v=vs, kv_len=jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict,
+                tokens: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    """One decode step: tokens [B, 1]; writes cache slot ``kv_len``.
+
+    Returns (logits [B, 1, V], updated cache).
+    """
+    params = cast_for_compute(params, compute_dtype)
+    B = tokens.shape[0]
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    pos = cache["kv_len"]                       # scalar int32
+    x = params["embed"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    positions = jnp.full((1,), pos, jnp.int32)
+    windows = _windows(cfg)
+    g = len(windows)
+    lay = _group_layers(cfg, params["layers"])
+    Smax = cache["k"].shape[2]
+    kc = cache["k"].reshape((cfg.n_layers // g, g) + cache["k"].shape[1:])
+    vc = cache["v"].reshape((cfg.n_layers // g, g) + cache["v"].shape[1:])
+
+    def body(x, scanned):
+        pg, kg, vg = scanned
+        new_k, new_v = [], []
+        for j, w in enumerate(windows):
+            pj = jax.tree.map(lambda a: a[j], pg)
+            h = rms_norm(x, pj["attn_norm"])
+            q = (h @ pj["wq"]).reshape(B, 1, Hq, hd)
+            kk = (h @ pj["wk"]).reshape(B, 1, Hkv, hd)
+            vv = (h @ pj["wv"]).reshape(B, 1, Hkv, hd)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            kk = apply_rope(kk, positions, cfg.rope_theta)
+            if cfg.query_scale:
+                q = q * (cfg.query_scale * hd ** 0.5)
+            z = jnp.zeros_like(pos)  # match pos dtype (x64-safe)
+            kj = jax.lax.dynamic_update_slice(kg[j], kk, (z, pos, z, z))
+            vj = jax.lax.dynamic_update_slice(vg[j], vv, (z, pos, z, z))
+            o = attention_decode(q, kj, vj, kv_len=pos + 1, window=w,
+                                 attn_softcap=cfg.attn_softcap)
+            o = o.reshape(B, 1, Hq * hd) @ pj["wo"]
+            if cfg.post_norms:
+                o = rms_norm(o, pj["post_attn_norm"])
+            x = x + o
+            x, _ = _mlp_block(cfg, x, pj)
+            new_k.append(kj)
+            new_v.append(vj)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (lay, kc, vc))
+    x = rms_norm(x, params["final_norm"])
+    unemb = params.get("unembed")
+    logits = (x @ unemb) if unemb is not None else (x @ params["embed"].T)
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    new_cache = dict(
+        k=ks.reshape(cache["k"].shape), v=vs.reshape(cache["v"].shape),
+        kv_len=pos + 1)
+    return logits, new_cache

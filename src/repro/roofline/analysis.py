@@ -1,0 +1,194 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute     = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory      = HLO_bytes / (chips x HBM_bw)
+    collective  = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` on a GSPMD-partitioned module reports **per-device**
+flops/bytes, so the "chips x" division is already applied; collective
+bytes are parsed from the optimized HLO (``compiled.as_text()`` —
+collectives are only materialized post-partitioning) by summing operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, per the grading spec.
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# one HLO instruction: "%name = <shape> <op>(<operands>), attrs"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)"
+    r"(?:-start|-done)?\(([^\n]*)$")
+_SHAPE_RE = re.compile(r"\b((?:pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128|"
+                       r"token)(?:\[[0-9,]*\])?)")
+
+
+def shape_bytes(shape: str) -> int:
+    """'f32[16,128]' -> 8192; scalar 'f32' -> 4."""
+    m = re.match(r"([a-z0-9]+)(?:\[([0-9,]*)\])?", shape)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    b = _DTYPE_BYTES.get(dt, 4)
+    if dims is None or dims == "":
+        return b
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * b
+
+
+@dataclass
+class CollectiveStats:
+    total_bytes: int = 0
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, nbytes: int) -> None:
+        self.total_bytes += nbytes
+        self.count += 1
+        k = self.by_kind.setdefault(kind, dict(bytes=0, count=0))
+        k["bytes"] += nbytes
+        k["count"] += 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in optimized HLO text.
+
+    Handles both sync ops and async pairs (-start counted once, -done
+    skipped); ``-start`` ops and fused computations keep the plain op name
+    in the instruction position.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        # find the op name between '= <shape> ' and '('
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*?\)|[^\s(]+)\s+"
+                     r"([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op
+        for suf in ("-start", "-done"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        if base not in _COLL_KINDS:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        # operand shapes: everything inside the call parens
+        inside = s[m.end():]
+        depth = 1
+        out = []
+        for ch in inside:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out.append(ch)
+        operand_str = "".join(out)
+        nbytes = sum(shape_bytes(x) for x in
+                     _SHAPE_RE.findall(operand_str))
+        if nbytes == 0:
+            # operands referenced by name only (post-scheduling HLO):
+            # fall back to the result shape
+            rm = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)", s)
+            if rm:
+                nbytes = sum(shape_bytes(x)
+                             for x in _SHAPE_RE.findall(rm.group(1)))
+        stats.add(base, nbytes)
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per device
+    bytes_hbm: float             # per device
+    coll_bytes: float            # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # global "useful" flops
+    useful_ratio: float          # model_flops / global HLO flops
+    step_s: float                # max of the three terms
+    roofline_frac: float         # compute_s / step_s (how compute-bound)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_from(cost: dict, coll: CollectiveStats, n_devices: int,
+                  model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.total_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = nbytes / HBM_BW
+    collective_s = cb / LINK_BW
+    terms = dict(compute=compute_s, memory=memory_s, collective=collective_s)
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    global_flops = flops * n_devices
+    return Roofline(
+        flops=flops, bytes_hbm=nbytes, coll_bytes=cb,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=model_flops / global_flops if global_flops else 0.0,
+        step_s=step_s,
+        roofline_frac=compute_s / step_s if step_s else 0.0)
+
+
+def analyze_compiled(compiled, n_devices: int, model_flops: float):
+    """compiled XLA executable -> (Roofline, CollectiveStats, mem dict).
+
+    flops/bytes/collective bytes come from the trip-count-aware HLO walk
+    (roofline/hlo_cost.py) because ``cost_analysis()`` counts while-loop
+    bodies once — a >10x undercount for scan-structured models.  The raw
+    XLA numbers are recorded alongside for reference.
+    """
+    from .hlo_cost import hlo_cost
+
+    txt = compiled.as_text()
+    c = hlo_cost(txt)
+    coll = CollectiveStats(total_bytes=int(c.coll_bytes),
+                           by_kind=c.coll_by_kind,
+                           count=int(sum(v["count"]
+                                         for v in c.coll_by_kind.values())))
+    mem = compiled.memory_analysis()
+    memd = dict(
+        argument_bytes=int(mem.argument_size_in_bytes),
+        output_bytes=int(mem.output_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        alias_bytes=int(mem.alias_size_in_bytes),
+        code_bytes=int(mem.generated_code_size_in_bytes),
+    )
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+    rl = roofline_from(dict(flops=c.flops, **{"bytes accessed": c.bytes}),
+                       coll, n_devices, model_flops)
+    memd["xla_cost_flops_once"] = float(xla_cost.get("flops", 0.0))
+    memd["dynamic_loops"] = int(c.dynamic_loops)
+    return rl, coll, memd

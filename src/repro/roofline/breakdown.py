@@ -1,0 +1,90 @@
+"""Per-instruction byte/flop breakdown with trip multiplication.
+
+The §Perf microscope: which ops (x their loop trip products) dominate a
+cell's memory/compute terms.
+
+    PYTHONPATH=src python -m repro.roofline.breakdown granite-8b train_4k
+"""
+from __future__ import annotations
+
+import sys
+
+from .hlo_cost import (_COLL, _EltRE, _FREE, _FUSIBLE, _CALLED_RE,
+                       _WHILE_RE, _dot_flops, _operand_shapes, _trip_count,
+                       parse_computations, shape_text_bytes)
+
+
+def breakdown(hlo_text: str, top: int = 25):
+    comps, entry = parse_computations(hlo_text)
+    rows = []  # (bytes, flops, trips, comp, op, result)
+
+    def walk(name: str, mult: float, seen: tuple):
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return
+        for ins in comp.instrs:
+            op = ins.op
+            if op in _FREE:
+                continue
+            if op == "while":
+                wm = _WHILE_RE.search(ins.attrs)
+                if wm:
+                    trips, _ = _trip_count(comps[wm.group(1)])
+                    walk(wm.group(2), mult * trips, seen + (name,))
+                continue
+            if op == "call":
+                cm = _CALLED_RE.search(ins.attrs)
+                if cm:
+                    walk(cm.group(1), mult, seen + (name,))
+                continue
+            flops = 0.0
+            if op == "dot":
+                flops = _dot_flops(comp, ins)
+            if op == "fusion":
+                nb = (sum(shape_text_bytes(s)
+                          for s in _operand_shapes(comp, ins))
+                      + shape_text_bytes(ins.result))
+            elif _EltRE.match(op) or op in _FUSIBLE:
+                nb = 0.0
+            else:
+                nb = (sum(shape_text_bytes(s)
+                          for s in _operand_shapes(comp, ins))
+                      + shape_text_bytes(ins.result))
+            if nb or flops:
+                rows.append((nb * mult, flops * mult, mult,
+                             name, op, ins.result[:48], ins.name[:40]))
+
+    walk(entry, 1.0, ())
+    rows.sort(key=lambda r: -r[0])
+    return rows[:top], rows
+
+
+def main() -> None:
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    arch, shape = sys.argv[1], sys.argv[2]
+    mesh_kind = sys.argv[3] if len(sys.argv) > 3 else "single"
+    sort_by = sys.argv[4] if len(sys.argv) > 4 else "bytes"
+
+    from ..launch.mesh import make_production_mesh
+    from ..launch.specs import build_cell
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cell = build_cell(arch, shape, mesh)
+    with mesh:
+        compiled = cell.lower().compile()
+    rows, allrows = breakdown(compiled.as_text())
+    if sort_by == "flops":
+        rows = sorted(allrows, key=lambda r: -r[1])[:25]
+    total_b = sum(r[0] for r in allrows)
+    total_f = sum(r[1] for r in allrows)
+    print(f"total bytes {total_b:.3e}  flops {total_f:.3e}\n")
+    print(f"{'GB(xtrips)':>11} {'GF':>9} {'trips':>7}  comp/op/result")
+    for nb, fl, mult, cname, op, res, iname in rows:
+        print(f"{nb / 1e9:11.2f} {fl / 1e9:9.1f} {mult:7.0f}  "
+              f"{cname[:28]:28s} {op:16s} {res} %{iname}")
+
+
+if __name__ == "__main__":
+    main()

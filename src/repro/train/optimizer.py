@@ -1,0 +1,111 @@
+"""Hand-rolled pytree optimizers: AdamW (+ cosine schedule, global clip).
+
+No optax dependency — the optimizer is a (init, update) pair over arbitrary
+parameter pytrees.  Optimizer state is f32 regardless of param dtype
+(mixed-precision master-state convention); state arrays inherit the
+*sharding* of their parameter via GSPMD propagation, which is what shards
+Adam moments alongside TP/EP-sharded params (ZeRO-style, for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray      # scalar int32
+    mu: Pytree             # first moment (f32)
+    nu: Pytree             # second moment (f32)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_frac * lr."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_init(params: Pytree) -> AdamState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32)
+        if jnp.issubdtype(p.dtype, jnp.floating) else jnp.zeros((), jnp.float32),
+        params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Pytree, state: AdamState,
+                 params: Pytree):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p, m, v
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = dict(grad_norm=gnorm, lr=lr)
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v), metrics
+
+
+def sgd_update(lr: float, grads: Pytree, params: Pytree) -> Pytree:
+    """Plain SGD (tests / tiny examples)."""
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)

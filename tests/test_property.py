@@ -1,0 +1,125 @@
+"""Hypothesis property tests on the system's invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import TemporalGraph
+from repro.core.motif import MOTIFS, TemporalMotif, get_motif
+from repro.core.spanning_tree import (build_tree, constraint_looseness,
+                                      tree_edge_subsets)
+
+SLOW = settings(max_examples=25, deadline=None,
+                suppress_health_check=list(HealthCheck))
+
+
+@st.composite
+def temporal_graphs(draw):
+    n = draw(st.integers(3, 20))
+    m = draw(st.integers(2, 80))
+    span = draw(st.integers(10, 5_000))
+    seed = draw(st.integers(0, 2**31 - 1))
+    r = np.random.default_rng(seed)
+    src = r.integers(0, n, m)
+    dst = (src + 1 + r.integers(0, n - 1, m)) % n   # no self loops
+    t = r.integers(0, span, m)
+    return TemporalGraph.from_edges(src, dst, t)
+
+
+@given(temporal_graphs())
+@SLOW
+def test_graph_invariants(g):
+    # global sort by time
+    assert (np.diff(g.t) >= 0).all()
+    # CSR partitions
+    assert g.out_ptr[-1] == g.m and g.in_ptr[-1] == g.m
+    assert g.pair_ptr[-1] == g.m
+    # time-sorted inside every out segment
+    for v in range(g.n):
+        seg = g.out_t[g.out_ptr[v]:g.out_ptr[v + 1]]
+        assert (np.diff(seg) >= 0).all()
+        assert (g.src[g.out_edge[g.out_ptr[v]:g.out_ptr[v + 1]]] == v).all()
+    # unique (u, v, t)
+    key = (g.src.astype(np.int64) * g.n + g.dst) * (g.t.max() + 1) + g.t
+    assert len(np.unique(key)) == g.m
+    # pair cross-index consistency
+    assert (g.pair_edge[g.pair_pos_out >= 0].shape[0] == g.m)
+    np.testing.assert_array_equal(g.out_edge[g.pair_pos_out], g.pair_edge)
+    np.testing.assert_array_equal(g.in_edge[g.pair_pos_in], g.pair_edge)
+
+
+@given(st.sampled_from(sorted(MOTIFS)), st.integers(0, 10))
+@SLOW
+def test_spanning_tree_invariants(name, root_pick):
+    motif = get_motif(name)
+    subsets = tree_edge_subsets(motif)
+    assert subsets, "every connected motif has a spanning tree"
+    for subset in subsets[:4]:
+        root = subset[root_pick % len(subset)]
+        tree = build_tree(motif, subset, root)
+        # every non-root edge has exactly one parent dependency
+        child_count = {}
+        for s in range(tree.num_edges):
+            for d in tree.deps[s]:
+                child_count[d.child] = child_count.get(d.child, 0) + 1
+        assert all(v == 1 for v in child_count.values())
+        assert set(child_count) == set(range(tree.num_edges)) - {tree.root}
+        # heights: parent > child
+        for s in range(tree.num_edges):
+            for d in tree.deps[s]:
+                assert tree.height[s] > tree.height[d.child]
+        # vertex_source covers all motif vertices
+        assert len(tree.vertex_source) == motif.num_vertices
+        assert constraint_looseness(motif, subset) >= 0
+
+
+@given(temporal_graphs(), st.sampled_from(["wedge", "triangle", "M4-2"]),
+       st.integers(1, 2_000))
+@SLOW
+def test_weight_dp_counts_partial_matches(g, name, delta):
+    """Claim 4.10: sum of center weights == brute-force partial matches."""
+    from repro.core.spanning_tree import candidate_trees
+    from repro.core.weights import count_tree_matches_ref, preprocess
+    motif = get_motif(name)
+    tree = candidate_trees(motif, n_candidates=1, roots_per_tree=1)[0]
+    wts = preprocess(g, tree, delta, use_c3=False)
+    ref = count_tree_matches_ref(g, tree, delta)
+    assert int(wts.W_total) == ref
+
+
+@given(temporal_graphs(), st.integers(1, 500))
+@SLOW
+def test_estimator_zero_when_no_matches(g, delta):
+    """A motif needing more vertices than the graph has -> estimate 0."""
+    from repro.core.estimator import estimate
+    if g.n >= 6:
+        return
+    motif = get_motif("M6-1")
+    res = estimate(g, motif, delta, k=256, chunk=256)
+    assert res.estimate == 0.0
+
+
+@given(st.integers(2, 6))
+@SLOW
+def test_motif_library_edges_connected(nv):
+    for m in MOTIFS.values():
+        if m.num_vertices != nv:
+            continue
+        assert m.num_edges >= m.num_vertices - 1
+
+
+def test_estimator_unbiased_mean_over_seeds():
+    """Lemma 4.12 empirically: mean over seeds approaches exact count."""
+    from repro.core.estimator import estimate
+    from repro.core.exact import count_exact
+    from repro.graphs import er_temporal_graph
+    g = er_temporal_graph(n=30, m=300, time_span=3_000, seed=5)
+    motif = get_motif("triangle")
+    delta = 500
+    exact = count_exact(g, motif, delta)
+    ests = [estimate(g, motif, delta, k=4096, chunk=4096, seed=s).estimate
+            for s in range(6)]
+    assert exact > 0
+    assert abs(np.mean(ests) - exact) / exact < 0.2

@@ -1,0 +1,192 @@
+"""Training substrate: optimizer, steps, checkpointing, fault tolerance."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import (WorkQueue, run_estimation_distributed,
+                                         run_resumable)
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   cosine_lr, global_norm)
+from repro.train.steps import compress_decompress, make_train_step
+
+
+def _quadratic_loss(params, batch):
+    t = batch["target"]
+    return jnp.sum((params["w"] - t) ** 2) + jnp.sum(params["b"] ** 2)
+
+
+def test_adamw_converges_on_quadratic():
+    params = dict(w=jnp.ones((8, 8)), b=jnp.ones((8,)))
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=5,
+                      total_steps=300)
+    step = jax.jit(make_train_step(_quadratic_loss, cfg))
+    opt = adamw_init(params)
+    batch = dict(target=jnp.full((8, 8), 3.0))
+    for _ in range(300):
+        params, opt, m = step(params, opt, batch)
+    assert float(m["loss"]) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(cosine_lr(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] == pytest.approx(0.1, abs=1e-6)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_grad_accumulation_matches_full_batch():
+    """accum_steps=4 must equal the single-shot gradient step."""
+    def loss(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    r = np.random.default_rng(0)
+    params = dict(w=jnp.asarray(r.normal(size=(6, 3)), jnp.float32))
+    batch = dict(x=jnp.asarray(r.normal(size=(16, 6)), jnp.float32),
+                 y=jnp.asarray(r.normal(size=(16, 3)), jnp.float32))
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.0)
+    p1, _, m1 = make_train_step(loss, cfg, accum_steps=1)(
+        params, adamw_init(params), batch)
+    p4, _, m4 = make_train_step(loss, cfg, accum_steps=4)(
+        params, adamw_init(params), batch)
+    # microbatch losses average to the full-batch loss for mean-MSE only
+    # when microbatches are equal-sized; grads average exactly.
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+
+
+def test_grad_compression_error_bounded_and_unbiased():
+    r = np.random.default_rng(1)
+    g = jnp.asarray(r.normal(size=(256, 64)), jnp.float32)
+    outs = [compress_decompress(g, jax.random.PRNGKey(s)) for s in range(20)]
+    err = jnp.abs(outs[0] - g).max() / jnp.abs(g).max()
+    assert float(err) < 1.2 / 127  # one quantization step
+    mean = sum(outs) / len(outs)
+    bias = float(jnp.abs(mean - g).mean() / jnp.abs(g).mean())
+    assert bias < 0.01  # stochastic rounding is unbiased
+
+
+def test_global_norm_clip():
+    from repro.train.optimizer import clip_by_global_norm
+    g = dict(a=jnp.full((4,), 10.0), b=jnp.full((4,), -10.0))
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(800), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    tree = dict(a=jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                nested=dict(b=jnp.ones((2,), jnp.int32)))
+    d = str(tmp_path)
+    ckpt.save(d, 3, tree, extra=dict(next_step=3))
+    ckpt.save(d, 7, jax.tree.map(lambda x: x * 2, tree),
+              extra=dict(next_step=7))
+    assert ckpt.latest_step(d) == 7
+    restored, extra = ckpt.restore(d, 7, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]) * 2)
+    assert extra["next_step"] == 7
+    ckpt.prune(d, keep=1)
+    assert ckpt.latest_step(d) == 7
+    assert not os.path.exists(os.path.join(d, "step_00000003"))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, dict(a=jnp.ones((3,))))
+    with pytest.raises(ValueError):
+        ckpt.restore(d, 1, dict(a=jnp.ones((4,))))
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 5, dict(a=jnp.ones((2,))))
+    # simulate a crash mid-write: .tmp dir without manifest promotion
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    assert ckpt.latest_step(d) == 5
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+def test_run_resumable_resumes_identically(tmp_path):
+    """Crash after step 7, rerun -> identical final state as uninterrupted."""
+    def step_fn(state, batch, step):
+        return {"x": state["x"] + batch}, dict(step=step)
+
+    def batches(step, attempt):
+        return float(step)
+
+    d1 = str(tmp_path / "a")
+    full, _ = run_resumable(step_fn, {"x": 0.0}, batches, 12, d1,
+                            ckpt_every=3)
+
+    d2 = str(tmp_path / "b")
+
+    class Boom(Exception):
+        pass
+
+    def injector(step, attempt):
+        if step == 7 and not os.environ.get("_RESUMED"):
+            raise Boom()
+
+    # first run: step 7 fails all retries -> skipped... instead emulate a
+    # crash by running only 7 steps, then resuming to 12.
+    part, _ = run_resumable(step_fn, {"x": 0.0}, batches, 7, d2,
+                            ckpt_every=3)
+    resumed, rep = run_resumable(step_fn, {"x": 0.0}, batches, 12, d2,
+                                 ckpt_every=3)
+    assert rep.resumed_from is not None
+    assert float(resumed["x"]) == float(full["x"])
+
+
+def test_run_resumable_retries_then_skips(tmp_path):
+    calls = []
+
+    def step_fn(state, batch, step):
+        return state, {}
+
+    def injector(step, attempt):
+        calls.append((step, attempt))
+        if step == 2:
+            raise RuntimeError("poisoned batch")
+
+    state, rep = run_resumable(step_fn, {"x": 0.0},
+                               lambda s, a: 0.0, 4, str(tmp_path),
+                               ckpt_every=100, max_retries=2,
+                               fail_injector=injector)
+    assert rep.retries == 3          # step 2: 3 failed attempts
+    assert rep.failures_skipped == 1
+    assert rep.steps_run == 4
+
+
+def test_workqueue_straggler_reissue():
+    results, q = run_estimation_distributed(
+        worker_fn=lambda uid: uid * 10, n_units=12, n_workers=3,
+        straggler_of=lambda w: w == 0)
+    assert results == [u * 10 for u in range(12)]
+    assert q.reissues >= 1           # straggler leases were re-issued
+
+
+def test_workqueue_duplicate_completion_idempotent():
+    q = WorkQueue(3, lease_s=100.0)
+    assert q.acquire(0) == 0
+    assert q.complete(0, "a") is True
+    assert q.complete(0, "b") is False   # duplicate dropped
+    q.complete(1, "x")
+    q.complete(2, "y")
+    assert q.results() == ["a", "x", "y"]
