@@ -16,10 +16,7 @@ import jax                                             # noqa: E402
 import jax.numpy as jnp                                # noqa: E402
 import numpy as np                                     # noqa: E402
 
-from repro.core.estimator import choose_tree           # noqa: E402
-from repro.core.motif import get_motif                 # noqa: E402
-from repro.core.sampler import make_sample_fn          # noqa: E402
-from repro.core.validate import make_count_fn          # noqa: E402
+from repro.core.batch import sample_matches_many       # noqa: E402
 from repro.graphs import fintxn_temporal_graph         # noqa: E402
 from repro.models import gnn                           # noqa: E402
 from repro.train.optimizer import AdamWConfig, adamw_init  # noqa: E402
@@ -27,22 +24,20 @@ from repro.train.steps import make_train_step          # noqa: E402
 
 
 def motif_features(g, motif_names, delta, K=1 << 13, seed=0):
-    """[n, len(motifs)] estimated per-node motif participation counts."""
+    """[n, len(motifs)] estimated per-node motif participation counts.
+
+    One batched pass through the estimation engine: the graph uploads
+    once and motifs sharing a (tree, delta) preprocess once.
+    """
     feats = np.zeros((g.n, len(motif_names)), np.float64)
-    dev = g.device_arrays()
-    for j, name in enumerate(motif_names):
-        motif = get_motif(name)
-        tree, wts = choose_tree(g, motif, delta, dev=dev)
-        sample_fn = make_sample_fn(tree, K)
-        count_fn = make_count_fn(tree, K)
-        s = sample_fn(dev, wts, jax.random.PRNGKey(seed + j))
-        out = count_fn(dev, wts, s)
+    batches = sample_matches_many(g, [(name, delta) for name in motif_names],
+                                  K, seed=seed)
+    for j, b in enumerate(batches):
         # attribute each valid sample's count to its matched vertices
-        cnt = np.asarray(out["cnt2"])          # [K]
-        phi_v = np.asarray(s["phi_v"])         # [K, nv]
-        scale = float(wts.W_total) / (2.0 * K)
+        cnt = np.asarray(b["cnt2"])            # [K]
+        phi_v = np.asarray(b["phi_v"])         # [K, nv]
         for v_col in range(phi_v.shape[1]):
-            np.add.at(feats[:, j], phi_v[:, v_col], cnt * scale)
+            np.add.at(feats[:, j], phi_v[:, v_col], cnt * b["scale"])
     return feats
 
 

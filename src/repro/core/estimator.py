@@ -53,6 +53,49 @@ def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
     return _jax.jit(fn)
 
 
+def make_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
+    """``fn(dev, wts, base_key, j0, n)``: chunks ``j0 .. j0+n-1`` in ONE
+    dispatch via ``jax.lax.scan`` over folded keys (estimator iteration C3).
+
+    Chunk ``j`` still draws from ``fold_in(base_key, j)`` — bit-identical
+    to the per-chunk host loop, so checkpoints written at window edges
+    resume exactly.  ``n`` is static (one compile per distinct window
+    length: the ``checkpoint_every`` window + at most one tail/resume
+    remainder); ``j0`` is traced, so resuming mid-stream never recompiles.
+    """
+    import jax as _jax
+    import jax.numpy as _jnp
+
+    s_fn = make_sample_fn(tree, chunk)
+    c_fn = make_count_fn(tree, chunk, Lmax=Lmax)
+
+    def fn(dev, wts, base_key, j0, n):
+        def body(acc, j):
+            kj = _jax.random.fold_in(base_key, j)
+            out = c_fn(dev, wts, s_fn(dev, wts, kj))
+            acc = {k: acc[k] + out[k].sum().astype(_jnp.int64)
+                   for k in _ACC_KEYS}
+            return acc, None
+
+        acc0 = {k: _jnp.zeros((), _jnp.int64) for k in _ACC_KEYS}
+        acc, _ = _jax.lax.scan(body, acc0, j0 + _jnp.arange(n))
+        return acc
+
+    return _jax.jit(fn, static_argnames=("n",))
+
+
+_WINDOW_FN_CACHE: dict = {}
+
+
+def cached_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
+    """Memoized ``make_window_fn`` — jobs sharing (tree, chunk, Lmax) reuse
+    one compiled sampler (the batch engine's dispatch-sharing path)."""
+    key = (tree, chunk, Lmax)
+    if key not in _WINDOW_FN_CACHE:
+        _WINDOW_FN_CACHE[key] = make_window_fn(tree, chunk, Lmax=Lmax)
+    return _WINDOW_FN_CACHE[key]
+
+
 @dataclass
 class EstimateResult:
     estimate: float
@@ -116,8 +159,13 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
              n_candidates: int = 3, chunk: int = 8192, Lmax: int = 16,
              use_c2: bool = True, use_c3: bool = True,
              checkpoint_path: str | None = None, checkpoint_every: int = 64,
-             dev: dict | None = None) -> EstimateResult:
-    """Alg. 6: the full TIMEST estimate with ``k`` samples."""
+             dev: dict | None = None,
+             wts: Weights | None = None) -> EstimateResult:
+    """Alg. 6: the full TIMEST estimate with ``k`` samples.
+
+    ``wts`` (with ``tree``) injects precomputed weights — the batch
+    engine's shared-preprocess path (core/batch.py).
+    """
     if dev is None:
         dev = g.device_arrays()
 
@@ -127,6 +175,8 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
                                 dev=dev, use_c2=use_c2, use_c3=use_c3)
         t_sel = time.perf_counter() - t0
         t_pre = 0.0  # preprocessing is folded into selection
+    elif wts is not None:
+        t_sel = t_pre = 0.0
     else:
         t_sel = 0.0
         t1 = time.perf_counter()
@@ -159,22 +209,27 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
         result.k = k_eff
         return result
 
-    chunk_fn = make_chunk_fn(tree, chunk, Lmax=Lmax)
+    window_fn = cached_window_fn(tree, chunk, Lmax=Lmax)
     base_key = jax.random.PRNGKey(seed)
+    checkpoint_every = max(1, int(checkpoint_every))
 
     t2 = time.perf_counter()
-    for j in range(start_chunk, n_chunks):
-        kj = jax.random.fold_in(base_key, j)
-        sums = chunk_fn(dev, wts, kj)
+    j = start_chunk
+    while j < n_chunks:
+        # align windows to checkpoint_every boundaries so a resumed run
+        # re-enters the exact same window grid (and compiled fn) as a
+        # fresh one
+        n = min(checkpoint_every - j % checkpoint_every, n_chunks - j)
+        sums = window_fn(dev, wts, base_key, j, n)
         for kk in _ACC_KEYS:
             acc[kk] += int(sums[kk])
-        if checkpoint_path and ((j + 1) % checkpoint_every == 0
-                                or j == n_chunks - 1):
+        j += n
+        if checkpoint_path:
             tmp = checkpoint_path + ".tmp"
             with open(tmp, "w") as f:
                 json.dump(dict(motif=motif.name, delta=int(delta), seed=seed,
                                chunk=chunk, tree_edges=list(tree.edge_ids),
-                               chunks_done=j + 1, acc=acc), f)
+                               chunks_done=j, acc=acc), f)
             os.replace(tmp, checkpoint_path)
     result.sampling_s = time.perf_counter() - t2
 

@@ -31,6 +31,15 @@ from .bisect import monotone_find, seg_lower_bound, seg_upper_bound  # noqa: E40
 from .spanning_tree import BEFORE, OUT, SpanningTree  # noqa: E402
 
 
+def bisect_iters(m: int) -> int:
+    """Adaptive bisection depth: ceil(log2(m))+1 covers any segment of an
+    m-edge graph (vs a conservative fixed 40 — §Perf C1).
+    ``REPRO_BISECT_ITERS`` overrides (A/B tuning)."""
+    import os as _os
+    return (int(_os.environ.get("REPRO_BISECT_ITERS", 0))
+            or max(8, int(m).bit_length() + 1))
+
+
 def _two_piece(ps_own, ps_prev, lo, mid):
     """Cumulative-in-window weight C(p) built from the own/prev split.
 
@@ -54,12 +63,7 @@ def make_sample_fn(tree: SpanningTree, K: int):
 
     def fn(dev, wts, key):
         t = dev["t"]
-        # adaptive bisection depth: ceil(log2(m))+1 covers any segment of
-        # the m-edge graph (vs the conservative fixed 40 — §Perf C1).
-        # REPRO_BISECT_ITERS overrides (A/B tuning).
-        import os as _os
-        it = int(_os.environ.get("REPRO_BISECT_ITERS", 0)) or max(
-            8, int(t.shape[0]).bit_length() + 1)
+        it = bisect_iters(t.shape[0])
         delta = jnp.asarray(wts.delta, jnp.int64)
         wd = jnp.asarray(wts.wd, jnp.int64)
         r = tree.root

@@ -25,6 +25,7 @@ scheme documented for TPUs without native int64.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from functools import partial
 from typing import Any
@@ -41,6 +42,25 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from .bisect import seg_lower_bound, seg_upper_bound  # noqa: E402
+
+# f32 holds integers exactly up to 2^24; the pallas dep-sum backend is only
+# trusted while every weight prefix stays below this.
+_F32_EXACT_MAX = float(2 ** 24)
+
+
+def depsum_backend(backend: str | None = None) -> str:
+    """Resolve the dep-sum backend: explicit arg > env > default "xla".
+
+    "xla"    — exact int64 bisect + prefix gathers (default);
+    "pallas" — the kernels/interval_weight fused kernel on f32-cast
+               prefixes (interpret mode off-TPU).  Callers must check the
+               returned ``exact`` flag and fall back when counts overflow
+               f32's exact-integer range (``preprocess`` does this).
+    """
+    b = backend or os.environ.get("REPRO_DEPSUM_BACKEND", "xla")
+    if b not in ("xla", "pallas"):
+        raise ValueError(f"REPRO_DEPSUM_BACKEND={b!r} (want xla|pallas)")
+    return b
 
 
 # ---------------------------------------------------------------------------
@@ -108,7 +128,8 @@ def _excl(x):
 # ---------------------------------------------------------------------------
 # the vectorized DP
 # ---------------------------------------------------------------------------
-def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
+def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
+                       backend: str | None = None):
     """Build a jitted ``fn(dev, delta, wd, q) -> Weights`` for a fixed tree.
 
     ``wd`` is the window stride (Constraint 3): windows are
@@ -116,7 +137,16 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
     ``wd >= time_span`` collapses to a single window (C3 disabled — the
     Table 6 ablation).  ``use_c2=False`` drops the ``\\ El`` exclusion
     (Constraint 2 disabled).
+
+    ``backend`` ("xla" | "pallas", default env ``REPRO_DEPSUM_BACKEND``)
+    selects the dep-sum inner loop: exact int64 XLA gathers, or the fused
+    kernels/interval_weight Pallas kernel on f32 prefixes.  The returned
+    dict carries an ``exact`` scalar flag — on the pallas path it is True
+    only while every weight prefix stayed inside f32's exact-integer
+    range; callers fall back to "xla" when it comes back False.
     """
+    backend = depsum_backend(backend)
+    wdt = jnp.float32 if backend == "pallas" else jnp.int64
     S = tree.num_edges
     order = [s for s in reversed(tree.topo_down)]   # children before parents
     alpha_of = access_alpha(tree)
@@ -125,7 +155,8 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
                 dst, window: str):
         """Vectorized Claim 4.9 inner sum for one dependency, all edges.
 
-        ``window``: 'own' (i = fl) or 'prev' (i = fl - 1).  Returns [m] int64.
+        ``window``: 'own' (i = fl) or 'prev' (i = fl - 1).  Returns [m]
+        in the weight dtype of the selected backend.
         """
         c = d.child
         meet = src if d.meet_end == 0 else dst
@@ -145,12 +176,15 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
             thi = jnp.minimum(t + delta, (i + 2) * wd - 1)
         brk = (i + 1) * wd
 
-        plo = seg_lower_bound(csr_t, p0, p1, tlo)
-        phi = seg_upper_bound(csr_t, p0, p1, thi)
-        pmid = jnp.clip(seg_lower_bound(csr_t, p0, p1, brk), plo, phi)
-
         pso, psp = w_csr[c]  # prefix over this child's alpha-CSR order
-        lam = (pso[pmid] - pso[plo]) + (psp[phi] - psp[pmid])
+        if backend == "pallas":
+            from ..kernels.interval_weight.ops import interval_weight
+            lam = interval_weight(csr_t, pso, psp, p0, p1, tlo, thi, brk)
+        else:
+            plo = seg_lower_bound(csr_t, p0, p1, tlo)
+            phi = seg_upper_bound(csr_t, p0, p1, thi)
+            pmid = jnp.clip(seg_lower_bound(csr_t, p0, p1, brk), plo, phi)
+            lam = (pso[pmid] - pso[plo]) + (psp[phi] - psp[pmid])
         if not use_c2:
             return lam
 
@@ -164,11 +198,15 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
         q0 = dev["pair_ptr"][pid0]
         q1 = jnp.where(has, dev["pair_ptr"][pid0 + 1], q0)
         pt = dev["pair_t"]
-        qlo = seg_lower_bound(pt, q0, q1, tlo)
-        qhi = seg_upper_bound(pt, q0, q1, thi)
-        qmid = jnp.clip(seg_lower_bound(pt, q0, q1, brk), qlo, qhi)
         ppo, ppp = w_pair[c]
-        el = (ppo[qmid] - ppo[qlo]) + (ppp[qhi] - ppp[qmid])
+        if backend == "pallas":
+            from ..kernels.interval_weight.ops import interval_weight
+            el = interval_weight(pt, ppo, ppp, q0, q1, tlo, thi, brk)
+        else:
+            qlo = seg_lower_bound(pt, q0, q1, tlo)
+            qhi = seg_upper_bound(pt, q0, q1, thi)
+            qmid = jnp.clip(seg_lower_bound(pt, q0, q1, brk), qlo, qhi)
+            el = (ppo[qmid] - ppo[qlo]) + (ppp[qhi] - ppp[qmid])
         return lam - el
 
     def fn(dev, delta, wd, q):
@@ -186,10 +224,11 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
         w_prev_l: list = [None] * S
         w_csr: dict = {}
         w_pair: dict = {}
+        prefix_tops: list = []   # last element of every prefix (f32 audit)
 
         for s in order:
-            wo = jnp.ones((m,), jnp.int64)
-            wp = jnp.ones((m,), jnp.int64)
+            wo = jnp.ones((m,), wdt)
+            wp = jnp.ones((m,), wdt)
             for d in tree.deps[s]:
                 wo = wo * dep_sum(dev, delta, wd, w_pair, w_csr, d, t, fl,
                                   src, dst, "own")
@@ -207,10 +246,13 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
                 w_csr[s] = (_excl(wo[perm]), _excl(wp[perm]))
                 w_pair[s] = (_excl(wo[dev["pair_edge"]]),
                              _excl(wp[dev["pair_edge"]]))
+                prefix_tops += [w_csr[s][0][-1], w_csr[s][1][-1],
+                                w_pair[s][0][-1], w_pair[s][1][-1]]
 
         r = tree.root
         ps_root_own = _excl(w_own_l[r])
         ps_root_prev = _excl(w_prev_l[r])
+        prefix_tops += [ps_root_own[-1], ps_root_prev[-1]]
 
         # per-window totals (Claim 4.10 restricted to window i)
         iarr = jnp.arange(q, dtype=jnp.int64)
@@ -227,7 +269,7 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
         ps_acc_prev = []
         ps_pair_own = []
         ps_pair_prev = []
-        zeros = jnp.zeros((m + 1,), jnp.int64)
+        zeros = jnp.zeros((m + 1,), wdt)
         for s in range(S):
             if s == r:
                 ps_acc_own.append(ps_root_own)
@@ -240,7 +282,7 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
                 ps_pair_own.append(w_pair[s][0])
                 ps_pair_prev.append(w_pair[s][1])
 
-        return dict(
+        out = dict(
             w_own=jnp.stack(w_own_l), w_prev=jnp.stack(w_prev_l),
             ps_acc_own=jnp.stack(ps_acc_own),
             ps_acc_prev=jnp.stack(ps_acc_prev),
@@ -248,6 +290,18 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True):
             ps_pair_prev=jnp.stack(ps_pair_prev),
             W_total=W_total, ps_win=ps_win,
             win_lo=win_lo, win_mid=win_mid, win_hi=win_hi)
+        if backend == "pallas":
+            # exact while no prefix total left f32's integer range: every
+            # intermediate value is bounded by some prefix's last element
+            # (weights are non-negative), so auditing the tops suffices.
+            exact = jnp.max(jnp.stack(prefix_tops)) < _F32_EXACT_MAX
+            out = {k: (v.astype(jnp.int64)
+                       if v.dtype == jnp.float32 else v)
+                   for k, v in out.items()}
+            out["exact"] = exact
+        else:
+            out["exact"] = jnp.asarray(True)
+        return out
 
     return jax.jit(fn, static_argnames=("q",))
 
@@ -257,15 +311,43 @@ def num_windows(time_span: int, wd: int) -> int:
     return max(1, -(-int(time_span + 1) // int(wd)) - 1)
 
 
+_PREPROCESS_FN_CACHE: dict = {}
+
+
+def cached_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
+                         backend: str | None = None):
+    """Memoized ``make_preprocess_fn``: one trace/compile per
+    (tree, use_c2, backend) — the batch engine calls this per job."""
+    key = (tree, use_c2, depsum_backend(backend))
+    if key not in _PREPROCESS_FN_CACHE:
+        _PREPROCESS_FN_CACHE[key] = make_preprocess_fn(
+            tree, use_c2=use_c2, backend=key[2])
+    return _PREPROCESS_FN_CACHE[key]
+
+
 def preprocess(g: TemporalGraph, tree: SpanningTree, delta: int,
                dev: dict | None = None, use_c2: bool = True,
-               use_c3: bool = True) -> Weights:
-    """Alg. 1: weights + prefix structure for the whole graph."""
+               use_c3: bool = True, backend: str | None = None) -> Weights:
+    """Alg. 1: weights + prefix structure for the whole graph.
+
+    On the pallas backend, falls back to the exact int64 XLA path when the
+    weight audit reports values outside f32's exact-integer range.
+    """
     if dev is None:
         dev = g.device_arrays()
     wd = int(delta) if use_c3 else int(g.time_span) + 1
     q = num_windows(g.time_span, wd)
-    out = make_preprocess_fn(tree, use_c2=use_c2)(dev, delta, wd, q)
+    backend = depsum_backend(backend)
+    if backend == "pallas":
+        from ..kernels.interval_weight.kernel import ITERS
+        if g.m >= (1 << ITERS):  # beyond the kernel's fixed-trip bisection
+            backend = "xla"
+    out = dict(cached_preprocess_fn(tree, use_c2=use_c2, backend=backend)(
+        dev, delta, wd, q))
+    if not bool(out.pop("exact")):
+        out = dict(cached_preprocess_fn(tree, use_c2=use_c2, backend="xla")(
+            dev, delta, wd, q))
+        out.pop("exact")
     return Weights(tree=tree, delta=int(delta), wd=wd, q=q, use_c2=use_c2,
                    **out)
 

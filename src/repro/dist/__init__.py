@@ -1,0 +1,9 @@
+"""Distribution layer: shardings, collectives, pipeline, sharded GNN.
+
+Everything here is mesh-shape-agnostic: axis names are discovered from the
+mesh (``data_axes`` folds the optional "pod" axis into data parallelism),
+and every sharding helper degrades to replication when a dimension does not
+divide the relevant axes — so the same specs build on the 8-device host
+mesh used in tests and the 512-chip production mesh.
+"""
+from . import collectives, gnn_sharded, pipeline, sharding  # noqa: F401

@@ -1,0 +1,179 @@
+"""NamedSharding builders for every model family (the GSPMD layer).
+
+Conventions:
+
+* ``data_axes(mesh)`` is a **tuple** of axis names that carry data
+  parallelism — ("data",) on a 2-axis mesh, ("pod", "data") when a pod
+  axis exists and pipeline parallelism is off.  PartitionSpec entries use
+  the tuple directly (product sharding).
+* Tensor parallelism always lives on the "model" axis (Megatron layout:
+  column-parallel in-projections, row-parallel out-projections; experts
+  sharded over "model" for EP).
+* Every helper guards on divisibility: a dimension that does not divide
+  its axes is replicated instead — the same spec builder works on any
+  mesh shape (host test meshes included).
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import jax
+
+from ..train.optimizer import AdamState
+
+
+# ---------------------------------------------------------------------------
+# mesh introspection
+# ---------------------------------------------------------------------------
+def data_axes(mesh: Mesh) -> tuple:
+    """Axis names carrying data parallelism (pod folds into data)."""
+    names = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return tuple(names) if names else tuple(
+        a for a in mesh.axis_names if a != "model")[:1]
+
+
+def n_data(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)],
+                       dtype=np.int64)) if data_axes(mesh) else 1
+
+
+def n_model(mesh: Mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64))
+
+
+def _dim(mesh: Mesh, size: int, axes):
+    """``axes`` if ``size`` divides their product, else None (replicate)."""
+    if axes is None:
+        return None
+    if size % _axis_size(mesh, axes) == 0:
+        return axes
+    return None
+
+
+def _named(mesh: Mesh, *dims) -> NamedSharding:
+    return NamedSharding(mesh, P(*dims))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# LM params (Megatron TP + EP)
+# ---------------------------------------------------------------------------
+def lm_param_shardings(cfg, params, mesh: Mesh):
+    """NamedSharding pytree for ``transformer.abstract_params(cfg)``."""
+    m = "model"
+
+    def layer_spec(name: str, leaf):
+        shp = leaf.shape
+        if name in ("wq", "wk", "wv"):            # [L, d, H*hd] col-parallel
+            return P(None, None, _dim(mesh, shp[2], m))
+        if name == "wo":                          # [L, H*hd, d] row-parallel
+            return P(None, _dim(mesh, shp[1], m), None)
+        if name in ("w_gate", "w_up", "shared_gate", "shared_up"):
+            return P(None, None, _dim(mesh, shp[2], m))
+        if name in ("w_down", "shared_down"):
+            return P(None, _dim(mesh, shp[1], m), None)
+        if name in ("moe_gate", "moe_up", "moe_down"):  # [L, E, ., .] EP
+            return P(None, _dim(mesh, shp[1], m), None, None)
+        return P()                                # norms, router
+
+    out = {}
+    for k, v in params.items():
+        if k == "layers":
+            out[k] = {n: _named(mesh, *layer_spec(n, leaf))
+                      for n, leaf in v.items()}
+        elif k == "embed":                        # [V, d] vocab-sharded
+            out[k] = _named(mesh, _dim(mesh, v.shape[0], m), None)
+        elif k == "unembed":                      # [d, V]
+            out[k] = _named(mesh, None, _dim(mesh, v.shape[1], m))
+        else:                                     # final_norm etc.
+            out[k] = replicated(mesh)
+    return out
+
+
+def lm_batch_shardings(mesh: Mesh):
+    da = data_axes(mesh)
+    sh = _named(mesh, da, None)
+    return dict(tokens=sh, labels=sh, mask=sh)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state
+# ---------------------------------------------------------------------------
+def opt_state_shardings(p_sh, mesh: Mesh, params=None, zero: bool = False):
+    """AdamState shardings mirroring the param shardings.
+
+    ``zero=True`` (ZeRO) additionally shards each moment leaf's first
+    still-replicated, divisible dimension over the data axes — the Adam
+    moments are 2x params in f32, so sharding them over data is the big
+    memory win.  Requires ``params`` (shapes) to check divisibility.
+    """
+    da = data_axes(mesh)
+    nd = _axis_size(mesh, da)
+
+    def moment_spec(sh: NamedSharding, leaf):
+        spec = list(sh.spec) if sh.spec else []
+        if not zero or params is None:
+            return sh
+        spec = spec + [None] * (len(leaf.shape) - len(spec))
+        for i, (entry, size) in enumerate(zip(spec, leaf.shape)):
+            if entry is None and nd > 1 and size % nd == 0:
+                spec[i] = da
+                return _named(mesh, *spec)
+        return sh
+
+    if params is None:
+        mu = p_sh
+    else:
+        mu = jax.tree.map(moment_spec, p_sh, params)
+    return AdamState(step=replicated(mesh), mu=mu, nu=mu)
+
+
+# ---------------------------------------------------------------------------
+# GNN / recsys
+# ---------------------------------------------------------------------------
+def gnn_param_shardings(params, mesh: Mesh):
+    """GNN weight matrices are tiny relative to activations: replicate."""
+    return jax.tree.map(lambda _: replicated(mesh), params)
+
+
+def _leading_dim_sharding(mesh: Mesh, leaf):
+    da = data_axes(mesh)
+    if leaf.ndim == 0 or not da:
+        return replicated(mesh)
+    dims = [_dim(mesh, leaf.shape[0], da)] + [None] * (leaf.ndim - 1)
+    return _named(mesh, *dims)
+
+
+def gnn_batch_shardings(mesh: Mesh, batch):
+    """Shard node/edge arrays over data when the leading dim divides."""
+    return jax.tree.map(lambda leaf: _leading_dim_sharding(mesh, leaf),
+                        batch)
+
+
+def recsys_param_shardings(params, mesh: Mesh):
+    out = jax.tree.map(lambda _: replicated(mesh), params)
+    table = params["table"]                       # [v_total, d] row-sharded
+    out["table"] = _named(mesh, _dim(mesh, table.shape[0], "model"), None)
+    return out
+
+
+def recsys_batch_shardings(mesh: Mesh, batch):
+    out = {}
+    for k, leaf in batch.items():
+        if k == "cand_ids":
+            out[k] = replicated(mesh)
+        else:
+            out[k] = _leading_dim_sharding(mesh, leaf)
+    return out

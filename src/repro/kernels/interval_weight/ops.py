@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import kernel as kernel_mod
 from .kernel import interval_weight_call
 
 
@@ -18,6 +19,11 @@ def interval_weight(csr_t, ps_own, ps_prev, p0, p1, tlo, thi, brk, *,
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if csr_t.shape[0] >= (1 << kernel_mod.ITERS):
+        raise ValueError(
+            f"interval_weight: {csr_t.shape[0]} edges exceed the "
+            f"fixed-trip bisection range 2^{kernel_mod.ITERS}; shard the "
+            "graph by time range (Constraint-3 windows) first")
     Q = p0.shape[0]
     bq = min(bq, max(Q, 1))
     pad = (-Q) % bq

@@ -4,14 +4,23 @@
         --graph powerlaw:n=2000,m=40000 --motif M5-3 --delta 5000 \
         --k 1048576 --checkpoint /tmp/timest.ckpt
 
+Batched serving mode — comma lists fan out into the full cross product
+and run through the shared-preprocess ``estimate_many`` engine:
+
+    PYTHONPATH=src python -m repro.launch.estimate \
+        --graph powerlaw:n=2000,m=40000 --motif M5-1,M5-3 \
+        --delta 2000,5000 --k 262144
+
 Graphs: ``powerlaw:...`` / ``er:...`` / ``fintxn:...`` synthetic specs or
 a path to an edge-list file.  The chunk loop checkpoints and resumes
-(fault tolerance); ``--workers`` drains the same chunks through the
-straggler-tolerant WorkQueue to demonstrate the distributed schedule.
+(fault tolerance).  ``--depsum-backend pallas`` routes weight
+preprocessing through the fused interval-weight kernel (exact-int64 XLA
+fallback on overflow).
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 
 def parse_graph(spec: str):
@@ -33,31 +42,60 @@ def parse_graph(spec: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="powerlaw:n=500,m=8000")
-    ap.add_argument("--motif", default="M5-3")
-    ap.add_argument("--delta", type=int, default=5_000)
+    ap.add_argument("--motif", default="M5-3",
+                    help="motif name, or comma list for batched serving")
+    ap.add_argument("--delta", default="5000",
+                    help="window, or comma list for batched serving")
     ap.add_argument("--k", type=int, default=1 << 18)
     ap.add_argument("--chunk", type=int, default=1 << 13)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--depsum-backend", choices=("xla", "pallas"),
+                    default=None, help="weight-preprocess inner loop")
     ap.add_argument("--exact", action="store_true",
                     help="also run the exact oracle (slow!)")
     args = ap.parse_args()
+    if args.depsum_backend:
+        os.environ["REPRO_DEPSUM_BACKEND"] = args.depsum_backend
 
     from ..core.estimator import estimate
     from ..core.motif import get_motif
 
     g = parse_graph(args.graph)
-    motif = get_motif(args.motif)
-    print(f"graph: n={g.n} m={g.m} span={g.time_span}  motif={motif.name} "
-          f"delta={args.delta}  k={args.k}")
-    res = estimate(g, motif, args.delta, args.k, seed=args.seed,
+    motifs = args.motif.split(",")
+    deltas = [int(d) for d in str(args.delta).split(",")]
+    print(f"graph: n={g.n} m={g.m} span={g.time_span}  "
+          f"motifs={motifs} deltas={deltas}  k={args.k}")
+
+    if len(motifs) > 1 or len(deltas) > 1:
+        if args.checkpoint:
+            raise SystemExit("--checkpoint is per-job and not supported in "
+                             "batched mode yet; run jobs singly to resume")
+        from ..core.batch import estimate_many
+        jobs = [(m, d, args.k) for m in motifs for d in deltas]
+        exact_cache: dict = {}
+        for res in estimate_many(g, jobs, seed=args.seed, chunk=args.chunk):
+            print(f"delta={res.delta}  {res.summary()}")
+            if args.exact:
+                from ..core.exact import count_exact
+                key = (res.motif, res.delta)
+                if key not in exact_cache:
+                    exact_cache[key] = count_exact(
+                        g, get_motif(res.motif), res.delta)
+                c = exact_cache[key]
+                err = abs(res.estimate - c) / max(c, 1)
+                print(f"  exact={c}  error={100 * err:.2f}%")
+        return
+
+    motif = get_motif(motifs[0])
+    res = estimate(g, motif, deltas[0], args.k, seed=args.seed,
                    chunk=args.chunk, checkpoint_path=args.checkpoint)
     print(res.summary())
     print(f"  fail: vmap={res.fail_vmap} delta={res.fail_delta} "
           f"order={res.fail_order} overflow={res.overflow}")
     if args.exact:
         from ..core.exact import count_exact
-        c = count_exact(g, motif, args.delta)
+        c = count_exact(g, motif, deltas[0])
         err = abs(res.estimate - c) / max(c, 1)
         print(f"  exact={c}  error={100 * err:.2f}%")
 

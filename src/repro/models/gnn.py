@@ -322,10 +322,14 @@ def _forward_graphcast(cfg: GNNConfig, params: dict, batch: dict):
     e_m = _mlp(params["embed_e_mesh"],
                jnp.ones((batch["mesh_senders"].shape[0], 1), hg.dtype))
 
+    # Under grid sharding the mesh-mesh edge set is replicated per shard,
+    # so the processor aggregates locally (a psum would multi-count).
+    ax_mesh = () if cfg.grid_sharded else ax
+
     def group(hm, e_m, ps):
         for p in ps:
             hm, e_m = _interaction(p, hm, hm, e_m, batch["mesh_senders"],
-                                   batch["mesh_receivers"], n_mesh, ax)
+                                   batch["mesh_receivers"], n_mesh, ax_mesh)
         return hm, e_m
 
     if cfg.remat:

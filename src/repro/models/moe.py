@@ -110,10 +110,14 @@ def moe_mlp(cfg, h: jnp.ndarray, p: dict):
     ys = jnp.einsum("ecf,efd->ecd", g * u, p["moe_down"])       # [E, C, d]
     gate_per_slot = gates.reshape(-1)[slot_gatepos]             # [E, C] f32
     gate_per_slot = jnp.where(valid, gate_per_slot, 0.0)
-    ys = ys * gate_per_slot[..., None].astype(ys.dtype)
-    out = jnp.zeros((T + 1, d), ys.dtype).at[
+    # Gate-multiply and combine in f32: a bf16 scatter-add here loses enough
+    # precision that prefill+decode drifts from the batch forward (routing
+    # gates amplify 1-ulp attention noise past test tolerance).
+    ys = ys.astype(jnp.float32) * gate_per_slot[..., None]
+    out = jnp.zeros((T + 1, d), jnp.float32).at[
         jnp.where(valid, slot_token, T).reshape(-1)].add(
         ys.reshape(-1, d), mode="drop")[:T]
+    out = out.astype(h.dtype)
     if cfg.n_shared_experts > 0:
         out = out + swiglu(h2, p["shared_gate"], p["shared_up"],
                            p["shared_down"])

@@ -168,7 +168,7 @@ def analyze_compiled(compiled, n_devices: int, model_flops: float):
     bodies once — a >10x undercount for scan-structured models.  The raw
     XLA numbers are recorded alongside for reference.
     """
-    from .hlo_cost import hlo_cost
+    from .hlo_cost import hlo_cost, xla_cost_dict
 
     txt = compiled.as_text()
     c = hlo_cost(txt)
@@ -184,9 +184,7 @@ def analyze_compiled(compiled, n_devices: int, model_flops: float):
         alias_bytes=int(mem.alias_size_in_bytes),
         code_bytes=int(mem.generated_code_size_in_bytes),
     )
-    xla_cost = compiled.cost_analysis()
-    if isinstance(xla_cost, list):
-        xla_cost = xla_cost[0]
+    xla_cost = xla_cost_dict(compiled.cost_analysis())
     rl = roofline_from(dict(flops=c.flops, **{"bytes accessed": c.bytes}),
                        coll, n_devices, model_flops)
     memd["xla_cost_flops_once"] = float(xla_cost.get("flops", 0.0))

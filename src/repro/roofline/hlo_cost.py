@@ -311,6 +311,22 @@ def _comp_cost(comps: dict, name: str, memo: dict,
     return total
 
 
+def xla_cost_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` output across jax versions.
+
+    Older jax returns one flat dict; the pinned version returns a
+    single-element list of dicts (one per partitioned module).  Returns a
+    plain dict either way ({} for None / empty).
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    raise TypeError(f"unexpected cost_analysis result: {type(cost)!r}")
+
+
 def hlo_cost_raw(hlo_text: str) -> Cost:
     """Unfused byte accounting (every op round-trips HBM; CPU-like)."""
     comps, entry = parse_computations(hlo_text)

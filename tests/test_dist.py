@@ -18,6 +18,8 @@ import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.util import get_shard_map
+shard_map = get_shard_map()
 """
 
 
@@ -167,9 +169,9 @@ def test_psum_chunked_matches_psum():
             b = psum_chunked(xl, "data", n_chunks=3)
             return a, b
 
-        fn = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
-                           out_specs=(P(None, None), P(None, None)),
-                           check_vma=False)
+        fn = shard_map(f, mesh=mesh, in_specs=P("data", None),
+                       out_specs=(P(None, None), P(None, None)),
+                       check_vma=False)
         a, b = fn(x)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
         print("OK")
