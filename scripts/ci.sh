@@ -16,7 +16,18 @@ timeout 120 python -m pip install -q --disable-pip-version-check \
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
+# sampler-backend seam: the interpret-mode kernel parity tests must hold
+# with REPRO_SAMPLER_BACKEND resolved both ways (the suite above already
+# ran them under the default "xla")
+for backend in xla pallas; do
+  REPRO_SAMPLER_BACKEND=$backend \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_sampler_kernel.py
+done
+
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite batch --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite sampler --fast
 fi

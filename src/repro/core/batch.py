@@ -118,7 +118,8 @@ def estimate_many(g: TemporalGraph, jobs: Iterable, seed: int = 0,
                   use_c2: bool = True, use_c3: bool = True,
                   checkpoint_every: int = 64, dev: dict | None = None,
                   backend: str | None = None,
-                  planner: BatchPlanner | None = None
+                  planner: BatchPlanner | None = None,
+                  sampler_backend: str | None = None
                   ) -> list[EstimateResult]:
     """Estimate every ``(motif, delta, k)`` job over one shared graph.
 
@@ -126,6 +127,11 @@ def estimate_many(g: TemporalGraph, jobs: Iterable, seed: int = 0,
     bit-identical to the sequential ``estimate()`` call with the same
     seed.  Pass a ``BatchPlanner`` to carry the preprocess cache across
     calls (a serving loop handling request batches).
+
+    ``backend`` routes weight preprocessing (dep-sums);
+    ``sampler_backend`` routes sampling (the fused kernels/tree_sampler
+    path when "pallas", per-job fallback as in ``estimate``).  Jobs
+    sharing a (tree, chunk, backend) still share one compiled sampler.
     """
     jobs = [as_job(j) for j in jobs]
     if planner is None:
@@ -142,7 +148,8 @@ def estimate_many(g: TemporalGraph, jobs: Iterable, seed: int = 0,
                        seed=seed if job.seed is None else job.seed,
                        tree=tree, wts=wts, chunk=chunk, Lmax=Lmax,
                        use_c2=planner.use_c2, use_c3=planner.use_c3,
-                       checkpoint_every=checkpoint_every, dev=dev)
+                       checkpoint_every=checkpoint_every, dev=dev,
+                       sampler_backend=sampler_backend)
         res.tree_select_s = t_plan
         results.append(res)
     return results

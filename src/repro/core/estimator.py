@@ -23,13 +23,14 @@ import numpy as np  # noqa: E402
 
 from .graph import TemporalGraph  # noqa: E402
 from .motif import TemporalMotif  # noqa: E402
-from .sampler import make_sample_fn  # noqa: E402
+from .sampler import make_sample_fn, sampler_backend  # noqa: E402
 from .spanning_tree import SpanningTree, candidate_trees  # noqa: E402
 from .validate import make_count_fn  # noqa: E402
 from .weights import Weights, preprocess  # noqa: E402
 
 
-def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
+def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
+                  sampler_backend: str | None = None):
     """Fused sample->validate->count->reduce for one chunk (one dispatch).
 
     Fusing the two jits (a) removes one host dispatch per chunk and (b)
@@ -37,10 +38,16 @@ def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
     instead of materializing them between calls; the chunk reduces to six
     scalars on device, so host<->device traffic per chunk is O(1)
     (section Perf, estimator iteration C2).
+
+    ``sampler_backend`` ("xla" | "pallas") picks the sampling path
+    *unguarded* (the fn is jitted, so the host-side eligibility check
+    cannot run inside) — callers gate with
+    ``tree_sampler.ops.pallas_sampler_eligible`` first, as ``estimate``
+    does.
     """
     import jax as _jax
 
-    s_fn = make_sample_fn(tree, chunk)
+    s_fn = make_sample_fn(tree, chunk, backend=sampler_backend, guard=False)
     c_fn = make_count_fn(tree, chunk, Lmax=Lmax)
 
     def fn(dev, wts, key):  # jit-of-jit inlines cleanly
@@ -53,7 +60,8 @@ def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
     return _jax.jit(fn)
 
 
-def make_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
+def make_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
+                   sampler_backend: str | None = None):
     """``fn(dev, wts, base_key, j0, n)``: chunks ``j0 .. j0+n-1`` in ONE
     dispatch via ``jax.lax.scan`` over folded keys (estimator iteration C3).
 
@@ -62,11 +70,15 @@ def make_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
     resume exactly.  ``n`` is static (one compile per distinct window
     length: the ``checkpoint_every`` window + at most one tail/resume
     remainder); ``j0`` is traced, so resuming mid-stream never recompiles.
+
+    ``sampler_backend="pallas"`` swaps the scanned sampler for the fused
+    kernels/tree_sampler ``pallas_call`` (unguarded — see
+    ``make_chunk_fn``); both backends draw bit-identical samples.
     """
     import jax as _jax
     import jax.numpy as _jnp
 
-    s_fn = make_sample_fn(tree, chunk)
+    s_fn = make_sample_fn(tree, chunk, backend=sampler_backend, guard=False)
     c_fn = make_count_fn(tree, chunk, Lmax=Lmax)
 
     def fn(dev, wts, base_key, j0, n):
@@ -87,12 +99,15 @@ def make_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
 _WINDOW_FN_CACHE: dict = {}
 
 
-def cached_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16):
-    """Memoized ``make_window_fn`` — jobs sharing (tree, chunk, Lmax) reuse
-    one compiled sampler (the batch engine's dispatch-sharing path)."""
-    key = (tree, chunk, Lmax)
+def cached_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
+                     backend: str | None = None):
+    """Memoized ``make_window_fn`` — jobs sharing (tree, chunk, Lmax,
+    backend) reuse one compiled sampler (the batch engine's
+    dispatch-sharing path)."""
+    key = (tree, chunk, Lmax, sampler_backend(backend))
     if key not in _WINDOW_FN_CACHE:
-        _WINDOW_FN_CACHE[key] = make_window_fn(tree, chunk, Lmax=Lmax)
+        _WINDOW_FN_CACHE[key] = make_window_fn(tree, chunk, Lmax=Lmax,
+                                               sampler_backend=key[3])
     return _WINDOW_FN_CACHE[key]
 
 
@@ -113,6 +128,7 @@ class EstimateResult:
     preprocess_s: float = 0.0
     sampling_s: float = 0.0
     tree_select_s: float = 0.0
+    sampler_backend: str = "xla"   # the backend that actually sampled
 
     @property
     def valid_rate(self) -> float:
@@ -160,11 +176,20 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
              use_c2: bool = True, use_c3: bool = True,
              checkpoint_path: str | None = None, checkpoint_every: int = 64,
              dev: dict | None = None,
-             wts: Weights | None = None) -> EstimateResult:
+             wts: Weights | None = None,
+             sampler_backend: str | None = None) -> EstimateResult:
     """Alg. 6: the full TIMEST estimate with ``k`` samples.
 
     ``wts`` (with ``tree``) injects precomputed weights — the batch
     engine's shared-preprocess path (core/batch.py).
+
+    ``sampler_backend`` ("xla" | "pallas", default env
+    ``REPRO_SAMPLER_BACKEND``) routes sampling through the fused
+    kernels/tree_sampler Pallas kernel; results are bit-identical.  The
+    pallas path silently downgrades to xla when the job sits outside the
+    kernel envelope (weights past f32-exact 2^24, time bounds past int32,
+    or VMEM budget) — the backend actually used is recorded on the
+    result.
     """
     if dev is None:
         dev = g.device_arrays()
@@ -183,6 +208,14 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
         wts = preprocess(g, tree, delta, dev=dev, use_c2=use_c2,
                          use_c3=use_c3)
         t_pre = time.perf_counter() - t1
+
+    from .sampler import sampler_backend as _resolve_backend
+    sb = _resolve_backend(sampler_backend)
+    if sb == "pallas":
+        from ..kernels.tree_sampler.ops import pallas_sampler_eligible
+        ok, _why = pallas_sampler_eligible(dev, wts)
+        if not ok:
+            sb = "xla"   # outside the kernel envelope — exact path
 
     W = int(wts.W_total)
     n_chunks = max(1, -(-k // chunk))
@@ -203,13 +236,13 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
         estimate=0.0, W=W, k=0, valid=0, fail_vmap=0, fail_delta=0,
         fail_order=0, overflow=0, cnt2_sum=0, motif=motif.name,
         tree_edges=tree.edge_ids, delta=int(delta),
-        preprocess_s=t_pre, tree_select_s=t_sel)
+        preprocess_s=t_pre, tree_select_s=t_sel, sampler_backend=sb)
 
     if W == 0:
         result.k = k_eff
         return result
 
-    window_fn = cached_window_fn(tree, chunk, Lmax=Lmax)
+    window_fn = cached_window_fn(tree, chunk, Lmax=Lmax, backend=sb)
     base_key = jax.random.PRNGKey(seed)
     checkpoint_every = max(1, int(checkpoint_every))
 

@@ -20,6 +20,8 @@ Pipeline per sample (all steps data-parallel over K):
 """
 from __future__ import annotations
 
+import os
+
 from ..util import ensure_x64
 
 ensure_x64()
@@ -35,9 +37,26 @@ def bisect_iters(m: int) -> int:
     """Adaptive bisection depth: ceil(log2(m))+1 covers any segment of an
     m-edge graph (vs a conservative fixed 40 — §Perf C1).
     ``REPRO_BISECT_ITERS`` overrides (A/B tuning)."""
-    import os as _os
-    return (int(_os.environ.get("REPRO_BISECT_ITERS", 0))
+    return (int(os.environ.get("REPRO_BISECT_ITERS", 0))
             or max(8, int(m).bit_length() + 1))
+
+
+def sampler_backend(backend: str | None = None) -> str:
+    """Resolve the sampler backend: explicit arg > env > default "xla".
+
+    "xla"    — the vectorized gather-chain sampler below (default);
+    "pallas" — the kernels/tree_sampler fused kernel: the whole per-sample
+               pipeline (window draw, center edge, every child bisection)
+               in ONE ``pallas_call`` over VMEM-resident CSR times and f32
+               prefix sums.  Bit-identical to "xla" while every weight
+               prefix stays inside f32's exact-integer range (< 2^24);
+               callers gate on ``tree_sampler.ops.pallas_sampler_eligible``
+               and fall back to "xla" otherwise (``estimate`` does this).
+    """
+    b = backend or os.environ.get("REPRO_SAMPLER_BACKEND", "xla")
+    if b not in ("xla", "pallas"):
+        raise ValueError(f"REPRO_SAMPLER_BACKEND={b!r} (want xla|pallas)")
+    return b
 
 
 def _two_piece(ps_own, ps_prev, lo, mid):
@@ -52,12 +71,40 @@ def _two_piece(ps_own, ps_prev, lo, mid):
     return C
 
 
-def make_sample_fn(tree: SpanningTree, K: int):
-    """Jitted ``fn(dev, wts, key) -> samples`` drawing K partial matches.
+def make_sample_fn(tree: SpanningTree, K: int, backend: str | None = None,
+                   guard: bool = True):
+    """``fn(dev, wts, key) -> samples`` drawing K partial matches.
 
     Returns dict with ``edges [K, S]`` (graph edge id per tree-local edge),
     ``window [K]`` and ``phi_v [K, |V|]`` (the vertex map).
+
+    ``backend`` ("xla" | "pallas", default env ``REPRO_SAMPLER_BACKEND``)
+    selects the execution path; both draw bit-identical samples.  With
+    ``guard=True`` (the default) the pallas path checks eligibility
+    (f32-exact weights, int32 time bounds, VMEM budget) per call and falls
+    back to xla — callers embedding the fn inside a jit/scan (where the
+    host-side check cannot run) pass ``guard=False`` and must gate
+    eligibility themselves, as ``estimate()`` does.
     """
+    backend = sampler_backend(backend)
+    if backend == "pallas":
+        from ..kernels.tree_sampler.ops import (make_pallas_sample_fn,
+                                                pallas_sampler_eligible)
+        p_fn = make_pallas_sample_fn(tree, K)
+        if not guard:
+            return p_fn
+        x_fn = _make_sample_fn_xla(tree, K)
+
+        def fn(dev, wts, key):
+            ok, _why = pallas_sampler_eligible(dev, wts)
+            return (p_fn if ok else x_fn)(dev, wts, key)
+
+        return fn
+    return _make_sample_fn_xla(tree, K)
+
+
+def _make_sample_fn_xla(tree: SpanningTree, K: int):
+    """The XLA gather-chain sampler (exact int64 throughout)."""
     S = tree.num_edges
     nv = tree.motif.num_vertices
 

@@ -338,10 +338,6 @@ def preprocess(g: TemporalGraph, tree: SpanningTree, delta: int,
     wd = int(delta) if use_c3 else int(g.time_span) + 1
     q = num_windows(g.time_span, wd)
     backend = depsum_backend(backend)
-    if backend == "pallas":
-        from ..kernels.interval_weight.kernel import ITERS
-        if g.m >= (1 << ITERS):  # beyond the kernel's fixed-trip bisection
-            backend = "xla"
     out = dict(cached_preprocess_fn(tree, use_c2=use_c2, backend=backend)(
         dev, delta, wd, q))
     if not bool(out.pop("exact")):

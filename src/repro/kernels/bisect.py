@@ -1,0 +1,31 @@
+"""Shared VMEM-resident segment bisection for the TIMEST Pallas kernels.
+
+Identical trajectory to ``core.bisect.seg_lower_bound`` /
+``seg_upper_bound`` (the XLA reference path) — the bit-identity contract
+between the XLA and Pallas samplers depends on every backend walking the
+same (l, h) sequence, so there is exactly ONE kernel-side copy of the
+loop body, used by both ``interval_weight`` and ``tree_sampler``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_bisect(vals, lo, hi, target, *, upper: bool, iters: int):
+    """Smallest ``p in [lo, hi]`` with ``vals[p] >= target`` (``>`` when
+    ``upper``); ``hi`` if none.  Branchless fixed-trip, gathers clamped."""
+    nmax = vals.shape[0] - 1
+
+    def body(_, c):
+        l, h = c
+        mid = (l + h) >> 1
+        v = jnp.take(vals, jnp.clip(mid, 0, nmax))
+        active = l < h
+        go_right = active & ((v <= target) if upper else (v < target))
+        l2 = jnp.where(go_right, mid + 1, l)
+        h2 = jnp.where(active & ~go_right, mid, h)
+        return (l2, h2)
+
+    l, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return l

@@ -1,12 +1,10 @@
-"""jit'd wrapper: query padding + interpret auto-select."""
+"""jit'd wrapper: interpret auto-select (padding lives in the kernel call)."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from . import kernel as kernel_mod
 from .kernel import interval_weight_call
 
 
@@ -15,25 +13,11 @@ def interval_weight(csr_t, ps_own, ps_prev, p0, p1, tlo, thi, brk, *,
                     bq: int = 1024, interpret: bool | None = None):
     """Batched two-piece interval weight sums (see kernel.py).
 
-    Pads the query batch to a ``bq`` multiple with empty segments.
+    Ragged query batches are padded to a ``bq`` multiple inside
+    ``interval_weight_call`` and the bisection trip count adapts to the
+    shard size, so any (Q, m) combination is accepted.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if csr_t.shape[0] >= (1 << kernel_mod.ITERS):
-        raise ValueError(
-            f"interval_weight: {csr_t.shape[0]} edges exceed the "
-            f"fixed-trip bisection range 2^{kernel_mod.ITERS}; shard the "
-            "graph by time range (Constraint-3 windows) first")
-    Q = p0.shape[0]
-    bq = min(bq, max(Q, 1))
-    pad = (-Q) % bq
-    if pad:
-        zi = jnp.zeros((pad,), p0.dtype)
-        p0, p1 = jnp.concatenate([p0, zi]), jnp.concatenate([p1, zi])
-        zt = jnp.zeros((pad,), tlo.dtype)
-        tlo = jnp.concatenate([tlo, zt])
-        thi = jnp.concatenate([thi, zt])
-        brk = jnp.concatenate([brk, zt])
-    out = interval_weight_call(csr_t, ps_own, ps_prev, p0, p1, tlo, thi,
-                               brk, bq=bq, interpret=interpret)
-    return out[:Q]
+    return interval_weight_call(csr_t, ps_own, ps_prev, p0, p1, tlo, thi,
+                                brk, bq=bq, interpret=interpret)

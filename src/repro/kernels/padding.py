@@ -1,0 +1,29 @@
+"""Shared query/block padding for the TIMEST Pallas kernels.
+
+Every kernel in this package streams a 1-D batch (interval-weight
+queries, sampler draws) through a fixed block size, so ragged batch
+lengths must be padded up to a block multiple before ``pallas_call`` and
+sliced back afterwards.  Zero padding is always safe for these kernels:
+a zero query describes an empty CSR segment and a zero draw is a valid
+(in-range) random target, and padded rows are discarded by the caller.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_block(mult: int, *arrays):
+    """Zero-pad each array's leading axis to a multiple of ``mult``.
+
+    Returns ``(padded_arrays, orig_len)``; slice kernel outputs back with
+    ``out[:orig_len]``.  No-op (same arrays) when already aligned.
+    """
+    n = arrays[0].shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return arrays, n
+    padded = tuple(
+        jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+        for a in arrays)
+    return padded, n

@@ -1,0 +1,2 @@
+from .ops import (make_pallas_sample_fn, pallas_sampler_eligible,  # noqa: F401
+                  prepare_draws)

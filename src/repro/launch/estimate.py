@@ -15,7 +15,9 @@ Graphs: ``powerlaw:...`` / ``er:...`` / ``fintxn:...`` synthetic specs or
 a path to an edge-list file.  The chunk loop checkpoints and resumes
 (fault tolerance).  ``--depsum-backend pallas`` routes weight
 preprocessing through the fused interval-weight kernel (exact-int64 XLA
-fallback on overflow).
+fallback on overflow); ``--sampler-backend pallas`` routes sampling
+through the fused kernels/tree_sampler kernel (one ``pallas_call`` per
+chunk, bit-identical samples, same automatic fallback rules).
 """
 from __future__ import annotations
 
@@ -52,11 +54,19 @@ def main() -> None:
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--depsum-backend", choices=("xla", "pallas"),
                     default=None, help="weight-preprocess inner loop")
+    ap.add_argument("--sampler-backend", choices=("xla", "pallas"),
+                    default=None,
+                    help="sampling path: fused kernels/tree_sampler "
+                         "pallas kernel, or the XLA gather chain "
+                         "(bit-identical; pallas falls back to xla "
+                         "outside the f32-exact/VMEM envelope)")
     ap.add_argument("--exact", action="store_true",
                     help="also run the exact oracle (slow!)")
     args = ap.parse_args()
     if args.depsum_backend:
         os.environ["REPRO_DEPSUM_BACKEND"] = args.depsum_backend
+    if args.sampler_backend:
+        os.environ["REPRO_SAMPLER_BACKEND"] = args.sampler_backend
 
     from ..core.estimator import estimate
     from ..core.motif import get_motif
@@ -92,7 +102,8 @@ def main() -> None:
                    chunk=args.chunk, checkpoint_path=args.checkpoint)
     print(res.summary())
     print(f"  fail: vmap={res.fail_vmap} delta={res.fail_delta} "
-          f"order={res.fail_order} overflow={res.overflow}")
+          f"order={res.fail_order} overflow={res.overflow}  "
+          f"sampler={res.sampler_backend}")
     if args.exact:
         from ..core.exact import count_exact
         c = count_exact(g, motif, deltas[0])

@@ -175,3 +175,25 @@ def test_interval_weight_kernel(case):
     ref = interval_weight_ref(*args)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-3, rtol=1e-5)
+
+
+def test_interval_weight_adaptive_iters_large_shard():
+    """Shards above 2^22 edges used to be rejected (fixed ITERS=22); the
+    trip count now adapts to the shard size, so the bisection still lands
+    on the right positions at the far end of the array."""
+    from repro.kernels.interval_weight.ops import interval_weight
+    from repro.kernels.interval_weight.ref import interval_weight_ref
+
+    m = (1 << 22) + 37          # one segment, just past the old limit
+    csr_t = jnp.arange(m, dtype=jnp.int32)
+    ps = jnp.arange(m + 1, dtype=jnp.float32)
+    Q = 5                        # ragged: kernel-level padding covers it
+    p0 = jnp.zeros((Q,), jnp.int32)
+    p1 = jnp.full((Q,), m, jnp.int32)
+    tlo = jnp.asarray([0, m - 3, 1, m - 1, 7], jnp.int32)
+    thi = jnp.asarray([0, m - 1, 5, m - 1, 7], jnp.int32)
+    brk = jnp.asarray([0, m - 2, 3, 0, 2], jnp.int32)
+    out = interval_weight(csr_t, ps, ps, p0, p1, tlo, thi, brk,
+                          interpret=True)
+    ref = interval_weight_ref(csr_t, ps, ps, p0, p1, tlo, thi, brk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
