@@ -45,6 +45,17 @@ def emit(bench, case, metric, value):
 _EXACT_CACHE: dict = {}
 
 
+def clear_engine_caches():
+    """Cold-start helper for the serving benchmarks: drop every compiled
+    program the engine/preprocess layers cache, so a 'sequential' leg
+    models one process per request.  Keep in sync with any new cache."""
+    from repro.core import engine as engine_mod
+    from repro.core import weights as weights_mod
+    engine_mod.clear_window_cache()
+    weights_mod._PREPROCESS_FN_CACHE.clear()
+    weights_mod._window_totals_fn.cache_clear()
+
+
 def exact_cached(g, motif, delta):
     """The pure-python exact oracle is the slow part — cache per motif."""
     from repro.core.exact import count_exact
@@ -236,9 +247,8 @@ def batch_bench(fast: bool):
     import json
     import os
 
-    from repro.core import weights as weights_mod
     from repro.core.batch import estimate_many
-    from repro.core.estimator import _WINDOW_FN_CACHE, estimate
+    from repro.core.estimator import estimate
     from repro.core.motif import get_motif
     from repro.graphs import powerlaw_temporal_graph
 
@@ -252,19 +262,15 @@ def batch_bench(fast: bool):
     # sampler program
     chunk, ck_every = 1 << 10, 2
 
-    def clear_caches():
-        _WINDOW_FN_CACHE.clear()
-        weights_mod._PREPROCESS_FN_CACHE.clear()
-
     t0 = time.perf_counter()
     seq = []
     for (mn, d, k) in jobs:
-        clear_caches()  # each request starts cold, like a serving process
+        clear_engine_caches()  # each request starts cold, like a serving process
         seq.append(estimate(g, get_motif(mn), d, k, seed=0, chunk=chunk,
                             checkpoint_every=ck_every))
     t_seq = time.perf_counter() - t0
 
-    clear_caches()
+    clear_engine_caches()
     t0 = time.perf_counter()
     bat = estimate_many(g, jobs, seed=0, chunk=chunk,
                         checkpoint_every=ck_every)
@@ -294,6 +300,196 @@ def batch_bench(fast: bool):
     )
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_batch.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+def engine_bench(fast: bool):
+    """Fused + sharded execution engine (core/engine.py) vs the cold
+    sequential loop on the 12-job workload.  Writes BENCH_engine.json.
+
+    Cold serving legs (the batch_bench methodology, bit-identical
+    counts):
+
+    * sequential — one-motif-at-a-time serving, engine caches cleared per
+      request;
+    * fused      — ``estimate_many`` through the engine at 1 device: jobs
+      sharing a plan key dispatch as ONE vmapped window program;
+    * sharded    — the fused workload again in a subprocess with 8 forced
+      host devices and a ``--mesh``-style data mesh, chunks round-robined
+      over shards.
+
+    Steady-state chunk-scaling legs: one fused 3-job window program
+    (8 chunks x 1024 samples) timed after warmup at mesh sizes 1/2/8 in
+    fresh subprocesses — the compile-free measure of what sharding the
+    chunk range buys (virtual host devices share this machine's physical
+    cores, which caps the achievable scaling at the core count).
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    from repro.core import engine as engine_mod
+    from repro.core.batch import estimate_many
+    from repro.core.estimator import estimate
+    from repro.core.motif import get_motif
+    from repro.graphs import powerlaw_temporal_graph
+
+    gspec = dict(n=300, m=4_000, time_span=60_000, seed=7)
+    g = powerlaw_temporal_graph(**gspec)
+    motifs = ("M4-2", "M5-3")
+    deltas = (2_000, 4_000)
+    ks = (1 << 10, 1 << 11, 1 << 12) if fast else (1 << 11, 1 << 12, 1 << 13)
+    jobs = [(mn, d, k) for mn in motifs for d in deltas for k in ks]
+    # chunk/checkpoint_every chosen so every budget is whole windows of
+    # the same static length (the batch_bench serving grid)
+    chunk, ck_every = 1 << 10, 2
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    t0 = time.perf_counter()
+    seq = []
+    for (mn, d, k) in jobs:
+        clear_engine_caches()  # each request starts cold, like a serving process
+        seq.append(estimate(g, get_motif(mn), d, k, seed=0, chunk=chunk,
+                            checkpoint_every=ck_every))
+    t_seq = time.perf_counter() - t0
+
+    clear_engine_caches()
+    engine_mod.STATS.reset()
+    t0 = time.perf_counter()
+    fused = estimate_many(g, jobs, seed=0, chunk=chunk,
+                          checkpoint_every=ck_every)
+    t_fused = time.perf_counter() - t0
+    fused_dispatches = engine_mod.STATS.dispatches
+    job_windows = engine_mod.STATS.job_windows
+
+    identical = all(a.estimate == b.estimate and a.cnt2_sum == b.cnt2_sum
+                    and a.valid == b.valid for a, b in zip(seq, fused))
+
+    # sharded leg: own process (device count is fixed at first jax init)
+    child = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, json
+sys.path.insert(0, "src")
+from repro.core.batch import estimate_many
+from repro.launch.mesh import make_estimator_mesh
+from repro.graphs import powerlaw_temporal_graph
+g = powerlaw_temporal_graph(**{gspec!r})
+mesh = make_estimator_mesh()
+t0 = time.perf_counter()
+res = estimate_many(g, {jobs!r}, seed=0, chunk={chunk},
+                    checkpoint_every={ck_every}, mesh=mesh)
+dt = time.perf_counter() - t0
+print(json.dumps(dict(t=round(dt, 3), cnt2=[r.cnt2_sum for r in res],
+                      mesh_shape=res[0].mesh_shape)))
+"""
+    r = subprocess.run([sys.executable, "-c", child], capture_output=True,
+                       text=True, cwd=repo)
+    assert r.returncode == 0, r.stderr
+    shard = json.loads(r.stdout.strip().splitlines()[-1])
+    t_shard = shard["t"]
+    identical_sharded = shard["cnt2"] == [x.cnt2_sum for x in fused]
+
+    # steady-state: s/window of one fused window program vs mesh size
+    steady_child = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import sys, time, json
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.core.engine import make_engine_window_fn
+from repro.core.estimator import choose_tree
+from repro.core.motif import get_motif
+from repro.launch.mesh import make_estimator_mesh
+from repro.graphs import powerlaw_temporal_graph
+D = %d
+g = powerlaw_temporal_graph(**%r)
+dev = g.device_arrays()
+tree, wts = choose_tree(g, get_motif("M5-3"), 4_000, dev=dev)
+mesh = make_estimator_mesh() if D > 1 else None
+fn = make_engine_window_fn(tree, %d, mesh=mesh)
+keys = jnp.stack([jax.random.PRNGKey(s) for s in range(3)])
+n = 8
+jax.block_until_ready(fn(dev, wts, keys, 0, n)["cnt2"])  # compile
+reps = %d
+t0 = time.perf_counter()
+for rr in range(reps):
+    jax.block_until_ready(fn(dev, wts, keys, rr * n, n)["cnt2"])
+dt = time.perf_counter() - t0
+print(json.dumps(dict(window_s=round(dt / reps, 4),
+                      samples_per_s=round(reps * n * 3 * %d / dt, 1))))
+"""
+    reps = 8 if fast else 24
+    steady = {}
+    for D in (1, 2, 8):
+        r = subprocess.run(
+            [sys.executable, "-c",
+             steady_child % (D, D, gspec, chunk, reps, chunk)],
+            capture_output=True, text=True, cwd=repo)
+        assert r.returncode == 0, r.stderr
+        steady[D] = json.loads(r.stdout.strip().splitlines()[-1])
+    scaling = {D: round(steady[1]["window_s"] / steady[D]["window_s"], 2)
+               for D in steady}
+
+    speedup_fused = t_seq / max(t_fused, 1e-9)
+    speedup_shard = t_seq / max(t_shard, 1e-9)
+    emit("engine", "workload", "n_jobs", len(jobs))
+    emit("engine", "workload", "identical_results",
+         identical and identical_sharded)
+    emit("engine", "workload", "sequential_s", f"{t_seq:.3f}")
+    emit("engine", "workload", "fused_s", f"{t_fused:.3f}")
+    emit("engine", "workload", "sharded8_s", f"{t_shard:.3f}")
+    emit("engine", "workload", "fused_dispatches", fused_dispatches)
+    emit("engine", "workload", "job_windows", job_windows)
+    emit("engine", "workload", "speedup_fused", f"{speedup_fused:.2f}")
+    emit("engine", "workload", "speedup_sharded8", f"{speedup_shard:.2f}")
+    for D in steady:
+        emit("engine", f"steady/D={D}", "window_s", steady[D]["window_s"])
+        emit("engine", f"steady/D={D}", "scaling_vs_1dev", scaling[D])
+    record = dict(
+        n_jobs=len(jobs),
+        jobs=[dict(motif=mn, delta=d, k=k) for (mn, d, k) in jobs],
+        graph=dict(n=g.n, m=g.m, time_span=g.time_span),
+        chunk=chunk,
+        checkpoint_every=ck_every,
+        sequential_s=round(t_seq, 3),
+        fused_s=round(t_fused, 3),
+        sharded8_s=round(t_shard, 3),
+        sharded8_mesh=shard["mesh_shape"],
+        dispatches_fused=fused_dispatches,
+        dispatches_sequential=job_windows,
+        speedup_fused=round(speedup_fused, 2),
+        speedup_sharded8=round(speedup_shard, 2),
+        steady_state={str(D): dict(**steady[D],
+                                   scaling_vs_1dev=scaling[D])
+                      for D in steady},
+        host_cores=os.cpu_count(),
+        identical_results=bool(identical and identical_sharded),
+        methodology=("cold legs: sequential = per-request estimate() "
+                     "loop with engine caches cleared per job; fused = "
+                     "one estimate_many() through core/engine.py at 1 "
+                     "device (jobs sharing a plan key dispatch as one "
+                     "vmapped window program); sharded8 = the fused "
+                     "workload in a fresh process with 8 forced host "
+                     "devices and a (data,) mesh, chunks round-robined "
+                     "over shards.  All legs return bit-identical "
+                     "counts.  dispatches_sequential counts job-windows "
+                     "(what the old per-job loop launched); "
+                     "dispatches_fused is what the engine launched. "
+                     "steady_state: one fused 3-job window program (8 "
+                     "chunks x 1024 samples) timed after warmup at mesh "
+                     "sizes 1/2/8 in fresh processes — the compile-free "
+                     "chunk-scaling measure."),
+        note=("virtual host devices share this machine's physical cores "
+              "(host_cores), which caps steady-state scaling: chunk "
+              "round-robin reduces per-shard work 8x, but wall-clock "
+              "gains saturate at the core count; the dispatch counts "
+              "are the hardware-independent signal"),
+    )
+    path = os.path.join(repo, "BENCH_engine.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     print(f"# wrote {path}", flush=True)
@@ -378,7 +574,7 @@ def sampler_bench(fast: bool):
 
 BENCHES = dict(t3=t3_speed, t4=t4_accuracy, t5=t5_small, t6=t6_ablation,
                t7=t7_trees, f6=f6_sweep, perf=perf_micro, batch=batch_bench,
-               sampler=sampler_bench)
+               sampler=sampler_bench, engine=engine_bench)
 
 
 def main() -> None:

@@ -2,7 +2,7 @@
 # Tier-1 CI gate: the full test suite must be green.
 #
 #   scripts/ci.sh            # tier-1 tests
-#   CI_BENCH=1 scripts/ci.sh # + the fast batch-serving benchmark
+#   CI_BENCH=1 scripts/ci.sh # + the fast serving benchmarks
 #
 # Mirrors ROADMAP.md "Tier-1 verify".  Dev-only deps (hypothesis) are
 # best-effort: tests guard their imports, so an offline container still
@@ -25,9 +25,18 @@ for backend in xla pallas; do
     python -m pytest -x -q tests/test_sampler_kernel.py
 done
 
+# execution engine: fusion + sharding parity must hold when the parent
+# process ITSELF runs an 8-device host mesh (the suite above ran the
+# in-process mesh tests on 1 device; the subprocess legs always force 8)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest -x -q tests/test_engine.py
+
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite batch --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite sampler --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite engine --fast
 fi

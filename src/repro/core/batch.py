@@ -11,12 +11,16 @@ re-compiles its sampler.  ``estimate_many()`` amortizes all three:
   ``(tree, delta, wd, use_c2, backend)`` cache — jobs that resolve to the
   same key (same motif+delta, or distinct motifs sharing a spanning tree)
   preprocess once;
-* sampling dispatches through ``cached_window_fn`` so jobs sharing a
-  (tree, chunk) reuse one compiled scan program.
+* sampling runs through the execution engine (core/engine.py): jobs
+  sharing a (tree, chunk, Lmax, backend, weights) plan key FUSE — their
+  base keys stack and one vmapped window program covers all of them per
+  dispatch — and each window's chunk range shards over the ``mesh``'s
+  data axes when one is passed.
 
 Per-job outputs are **bit-identical** to ``estimate(g, motif, delta, k,
 seed=seed)``: the same candidate ranking picks the same tree, and chunk
-``j`` still draws from ``fold_in(PRNGKey(seed), j)``.
+``j`` still draws from ``fold_in(PRNGKey(seed), j)`` regardless of which
+fused dispatch or mesh shard executes it (engine determinism contract).
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ import time
 from dataclasses import dataclass
 from typing import Iterable, Sequence
 
-from .estimator import EstimateResult, estimate
+from .estimator import EstimateResult
 from .graph import TemporalGraph
 from .motif import TemporalMotif, get_motif
 from .spanning_tree import SpanningTree, candidate_trees
@@ -119,8 +123,8 @@ def estimate_many(g: TemporalGraph, jobs: Iterable, seed: int = 0,
                   checkpoint_every: int = 64, dev: dict | None = None,
                   backend: str | None = None,
                   planner: BatchPlanner | None = None,
-                  sampler_backend: str | None = None
-                  ) -> list[EstimateResult]:
+                  sampler_backend: str | None = None,
+                  mesh=None) -> list[EstimateResult]:
     """Estimate every ``(motif, delta, k)`` job over one shared graph.
 
     Returns one ``EstimateResult`` per job, in job order, each
@@ -130,8 +134,11 @@ def estimate_many(g: TemporalGraph, jobs: Iterable, seed: int = 0,
 
     ``backend`` routes weight preprocessing (dep-sums);
     ``sampler_backend`` routes sampling (the fused kernels/tree_sampler
-    path when "pallas", per-job fallback as in ``estimate``).  Jobs
-    sharing a (tree, chunk, backend) still share one compiled sampler.
+    path when "pallas", per-job fallback as in ``estimate`` — an
+    ineligible job splits off into its own xla group without downgrading
+    its fused siblings).  ``mesh`` shards every window's chunk range over
+    the mesh's data axes.  Jobs sharing a plan key run fused: one
+    dispatch covers a whole ``checkpoint_every`` window of ALL of them.
     """
     jobs = [as_job(j) for j in jobs]
     if planner is None:
@@ -139,20 +146,22 @@ def estimate_many(g: TemporalGraph, jobs: Iterable, seed: int = 0,
                                use_c2=use_c2, use_c3=use_c3, backend=backend)
     dev = planner.dev
 
-    results = []
-    for job in jobs:
+    from .engine import EngineJob, plan_jobs, run_plan
+    engine_jobs = []
+    for i, job in enumerate(jobs):
         t0 = time.perf_counter()
         tree, wts = planner.plan(job.motif, job.delta)
         t_plan = time.perf_counter() - t0
-        res = estimate(g, job.motif, job.delta, job.k,
-                       seed=seed if job.seed is None else job.seed,
-                       tree=tree, wts=wts, chunk=chunk, Lmax=Lmax,
-                       use_c2=planner.use_c2, use_c3=planner.use_c3,
-                       checkpoint_every=checkpoint_every, dev=dev,
-                       sampler_backend=sampler_backend)
-        res.tree_select_s = t_plan
-        results.append(res)
-    return results
+        ej = EngineJob(index=i, motif=job.motif, delta=int(job.delta),
+                       k=int(job.k),
+                       seed=int(seed if job.seed is None else job.seed),
+                       tree=tree, wts=wts)
+        ej.tree_select_s = t_plan
+        engine_jobs.append(ej)
+    plan = plan_jobs(engine_jobs, dev=dev, chunk=chunk, Lmax=Lmax,
+                     checkpoint_every=checkpoint_every, mesh=mesh,
+                     sampler_backend=sampler_backend)
+    return run_plan(plan)
 
 
 def sample_matches_many(g: TemporalGraph, specs: Sequence, K: int,

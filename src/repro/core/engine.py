@@ -1,0 +1,426 @@
+"""Sharded cross-job execution engine: one mesh-wide dispatch per window.
+
+This module owns ALL estimator dispatch (design note — the ROADMAP
+"Multi-device sharded sampling" + "Cross-job fusion" items land here).
+
+Why an engine layer
+-------------------
+TIMEST's estimator is embarrassingly parallel across samples (paper
+Alg. 6/7): chunk ``j`` of a job is a pure function of
+``fold_in(PRNGKey(seed), j)`` and reduces to six int64 scalars.  Real
+workloads (odeN-style multi-motif serving) run MANY such jobs over one
+graph, and the wins live in aggregating their dispatches:
+
+* **Cross-job fusion** — jobs sharing a compiled window program are
+  stacked on a leading job axis: their folded base keys become one
+  ``[J, 2]`` array and ``jax.vmap`` runs ONE program over all J jobs'
+  chunks (``core.sampler.make_batched_sample_fn`` + a vmapped count fn).
+* **Mesh sharding** — the chunk range of each window is ``shard_map``-ed
+  over the mesh's data axes (``dist.sharding.data_axes``): shard ``d`` of
+  ``D`` executes chunk offsets ``d, d + D, d + 2D, ...`` (round-robin by
+  the static stride ``D``) and one ``jax.lax.psum`` combines the int64
+  accumulator dicts.
+
+A ``checkpoint_every`` window of J fused jobs on D devices is therefore
+ONE dispatch instead of J x window host round-trips.
+
+The plan key
+------------
+Jobs fuse when they share ``(tree, chunk, Lmax, backend)`` *and* the same
+``Weights`` object (same preprocess output — jobs differing only in
+``k``/``seed``).  The compiled window program is memoized in a bounded
+LRU keyed on the full plan key ``(tree, chunk, Lmax, backend, mesh)`` —
+distinct graphs/Lmax variants age out instead of accumulating forever
+(the old module-global ``_WINDOW_FN_CACHE``).  ``backend`` is resolved
+PER JOB before grouping: a ``pallas_sampler_eligible`` veto downgrades
+only that job to "xla" (recorded as ``EstimateResult.fallback_reason``)
+and the group splits, instead of dragging every fused sibling down.
+
+Determinism contract
+--------------------
+Results are **bit-identical** to sequential ``estimate()`` on ANY mesh
+shape, fused or not:
+
+* chunk ``j`` always draws from ``fold_in(base_key, j)`` — the chunk ->
+  key map never depends on which shard executes it or on the job axis;
+* accumulators are exact int64 sums of per-chunk int64 scalars, and
+  integer addition is associative + commutative, so the shard-local scan
+  order and the psum combine order cannot change the total;
+* window grids align to ``checkpoint_every`` boundaries, so a checkpoint
+  written on a 1-device run resumes bit-identically on an 8-device mesh
+  (and vice versa) — the checkpoint stores only ``(chunks_done, acc)``,
+  which is mesh-shape-free.
+
+Shards execute ``ceil(n / D)`` slots each; offsets past ``n`` are masked
+to zero contribution (the chunk is computed and discarded — SPMD padding,
+never a collective divergence).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any
+
+from ..util import ensure_x64
+
+ensure_x64()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from ..dist.collectives import folded_axis_index  # noqa: E402
+from ..dist.sharding import data_axes, n_data  # noqa: E402
+from ..util import get_shard_map  # noqa: E402
+from .estimator import _ACC_KEYS, EstimateResult  # noqa: E402
+from .motif import TemporalMotif  # noqa: E402
+from .sampler import make_batched_sample_fn  # noqa: E402
+from .sampler import sampler_backend as _resolve_backend  # noqa: E402
+from .spanning_tree import SpanningTree  # noqa: E402
+from .validate import make_count_fn  # noqa: E402
+from .weights import Weights  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# compiled window programs: fused over jobs, sharded over chunks
+# ---------------------------------------------------------------------------
+def make_engine_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
+                          backend: str | None = None, mesh=None):
+    """``fn(dev, wts, base_keys, j0, n) -> {key: [J] int64}``: chunks
+    ``j0 .. j0+n-1`` of J fused jobs in ONE dispatch.
+
+    ``base_keys [J, 2]`` stacks the jobs' PRNG base keys; chunk ``j`` of
+    job ``i`` draws from ``fold_in(base_keys[i], j)`` exactly as the
+    sequential path does.  ``n`` is static (one compile per distinct
+    window length); ``j0`` is traced, so resuming mid-stream never
+    recompiles.  With a ``mesh``, the body runs under ``shard_map`` over
+    the data axes: shard ``d`` scans offsets ``d + i*D`` (static stride
+    round-robin), masks offsets past ``n``, and a ``psum`` combines the
+    exact int64 accumulators.
+    """
+    bs_fn = make_batched_sample_fn(tree, chunk, backend=backend)
+    bc_fn = jax.vmap(make_count_fn(tree, chunk, Lmax=Lmax),
+                     in_axes=(None, None, 0))
+
+    def chunk_sums(dev, wts, base_keys, j):
+        keys = jax.vmap(lambda bk: jax.random.fold_in(bk, j))(base_keys)
+        out = bc_fn(dev, wts, bs_fn(dev, wts, keys))
+        return {k: out[k].sum(axis=1).astype(jnp.int64) for k in _ACC_KEYS}
+
+    if mesh is not None and (not data_axes(mesh)
+                             or n_data(mesh) != mesh.size):
+        raise ValueError(
+            f"engine meshes must be data-only (axes {mesh.axis_names}, "
+            f"data extent {n_data(mesh)} of {mesh.size} devices): chunks "
+            "round-robin over data_axes and any other axis would "
+            "recompute every chunk per shard — build one with "
+            "launch.mesh.make_estimator_mesh")
+
+    if mesh is None:
+        def window(dev, wts, base_keys, j0, n):
+            def step(acc, j):
+                out = chunk_sums(dev, wts, base_keys, j)
+                return {k: acc[k] + out[k] for k in _ACC_KEYS}, None
+
+            acc0 = {k: jnp.zeros((base_keys.shape[0],), jnp.int64)
+                    for k in _ACC_KEYS}
+            acc, _ = jax.lax.scan(step, acc0, j0 + jnp.arange(n))
+            return acc
+
+        return jax.jit(window, static_argnames=("n",))
+
+    axes = data_axes(mesh)
+    D = n_data(mesh)
+
+    def window(dev, wts, base_keys, j0, n):
+        slots = -(-n // D)
+
+        def body(dev, wts, base_keys, j0):
+            d = folded_axis_index(mesh, axes)
+
+            def step(acc, i):
+                off = d + i * D
+                out = chunk_sums(dev, wts, base_keys, j0 + off)
+                live = (off < n).astype(jnp.int64)
+                return {k: acc[k] + out[k] * live for k in _ACC_KEYS}, None
+
+            acc0 = {k: jnp.zeros((base_keys.shape[0],), jnp.int64)
+                    for k in _ACC_KEYS}
+            acc, _ = jax.lax.scan(step, acc0, jnp.arange(slots))
+            return jax.lax.psum(acc, axes)
+
+        sm = get_shard_map()(body, mesh=mesh,
+                             in_specs=(P(), P(), P(), P()),
+                             out_specs=P(), check_rep=False)
+        return sm(dev, wts, base_keys, j0)
+
+    return jax.jit(window, static_argnames=("n",))
+
+
+# ---------------------------------------------------------------------------
+# bounded LRU over compiled window programs (full plan key)
+# ---------------------------------------------------------------------------
+_WINDOW_FN_LRU: OrderedDict = OrderedDict()
+
+
+def _cache_capacity() -> int:
+    return max(1, int(os.environ.get("REPRO_ENGINE_CACHE", 32)))
+
+
+def cached_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
+                     backend: str | None = None, mesh=None):
+    """LRU-memoized ``make_engine_window_fn`` keyed on the FULL plan key
+    ``(tree, chunk, Lmax, backend, mesh)``.
+
+    Bounded at ``REPRO_ENGINE_CACHE`` entries (default 32): evicting an
+    entry drops its jit function, so programs for long-gone graphs/Lmax
+    variants are garbage-collected instead of accumulating across a
+    serving process's lifetime.
+    """
+    key = (tree, int(chunk), int(Lmax), _resolve_backend(backend), mesh)
+    fn = _WINDOW_FN_LRU.get(key)
+    if fn is None:
+        fn = make_engine_window_fn(tree, chunk, Lmax=Lmax, backend=key[3],
+                                   mesh=mesh)
+        _WINDOW_FN_LRU[key] = fn
+    _WINDOW_FN_LRU.move_to_end(key)
+    while len(_WINDOW_FN_LRU) > _cache_capacity():
+        _WINDOW_FN_LRU.popitem(last=False)
+    return fn
+
+
+def clear_window_cache() -> None:
+    """Drop every cached window program (tests/benchmark cold starts)."""
+    _WINDOW_FN_LRU.clear()
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PlanKey:
+    """Fusion key: jobs sharing it run through one compiled program."""
+
+    tree: SpanningTree
+    chunk: int
+    Lmax: int
+    backend: str     # resolved sampler backend ("xla" | "pallas")
+
+
+@dataclass
+class EngineJob:
+    """One planned estimation job + its runtime cursor/accumulators."""
+
+    index: int
+    motif: TemporalMotif
+    delta: int
+    k: int
+    seed: int
+    tree: SpanningTree
+    wts: Weights
+    checkpoint_path: str | None = None
+    # resolved by plan_jobs
+    backend: str = "xla"
+    fallback_reason: str = ""
+    n_chunks: int = 0
+    k_eff: int = 0
+    cursor: int = 0
+    acc: dict = field(default_factory=dict)
+    base_key: Any = None
+    group_size: int = 1
+    # timings (tree_select_s/preprocess_s are filled by the front-ends)
+    sampling_s: float = 0.0
+    preprocess_s: float = 0.0
+    tree_select_s: float = 0.0
+
+
+@dataclass
+class JobGroup:
+    key: PlanKey
+    wts: Weights
+    jobs: list
+
+
+@dataclass
+class ExecutionPlan:
+    """Grouped jobs + the mesh/window config ``run_plan`` executes."""
+
+    jobs: list          # input order
+    groups: list
+    dev: dict
+    mesh: Any
+    chunk: int
+    Lmax: int
+    checkpoint_every: int
+    dispatches: int = 0
+
+    @property
+    def mesh_shape(self) -> tuple | None:
+        if self.mesh is None:
+            return None
+        return tuple(int(self.mesh.shape[a]) for a in self.mesh.axis_names)
+
+
+@dataclass
+class EngineStats:
+    """Process-wide dispatch accounting (tests assert on these)."""
+
+    dispatches: int = 0         # compiled window programs launched
+    fused_dispatches: int = 0   # dispatches carrying more than one job
+    job_windows: int = 0        # job x window pairs covered
+
+    def reset(self) -> None:
+        self.dispatches = self.fused_dispatches = self.job_windows = 0
+
+
+STATS = EngineStats()
+
+
+def _load_checkpoint(job: EngineJob, chunk: int) -> None:
+    """Resume ``(cursor, acc)`` from the job's checkpoint when it matches.
+
+    The format (and the match predicate) is exactly the sequential
+    estimator's, and records nothing about the mesh — which is what makes
+    resume bit-identical across mesh shapes.
+    """
+    path = job.checkpoint_path
+    if not path or not os.path.exists(path):
+        return
+    with open(path) as f:
+        st = json.load(f)
+    if (st["motif"] == job.motif.name and st["delta"] == job.delta
+            and st["seed"] == job.seed and st["chunk"] == chunk
+            and tuple(st["tree_edges"]) == job.tree.edge_ids
+            # a checkpoint from a LARGER budget would divide its counts
+            # by this run's smaller k — stale state, start fresh
+            and int(st["chunks_done"]) <= job.n_chunks):
+        job.acc = {kk: int(st["acc"][kk]) for kk in _ACC_KEYS}
+        job.cursor = int(st["chunks_done"])
+
+
+def _write_checkpoint(job: EngineJob, chunk: int) -> None:
+    tmp = job.checkpoint_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(dict(motif=job.motif.name, delta=job.delta, seed=job.seed,
+                       chunk=chunk, tree_edges=list(job.tree.edge_ids),
+                       chunks_done=job.cursor, acc=job.acc), f)
+    os.replace(tmp, job.checkpoint_path)
+
+
+def plan_jobs(jobs, *, dev: dict, chunk: int = 8192, Lmax: int = 16,
+              checkpoint_every: int = 64, mesh=None,
+              sampler_backend: str | None = None) -> ExecutionPlan:
+    """Resolve backends, load checkpoints and group jobs into a plan.
+
+    ``jobs`` is a list of ``EngineJob``s with identity fields set (index,
+    motif, delta, k, seed, tree, wts, checkpoint_path).  The requested
+    ``sampler_backend`` is resolved per job: pallas-ineligible jobs are
+    downgraded to "xla" individually (reason recorded), which splits
+    their fused group instead of downgrading every job in it.
+    """
+    sb_req = _resolve_backend(sampler_backend)
+    elig: dict[int, tuple[bool, str]] = {}
+    groups: OrderedDict = OrderedDict()
+    for job in jobs:
+        job.backend, job.fallback_reason = sb_req, ""
+        if sb_req == "pallas":
+            wid = id(job.wts)
+            if wid not in elig:
+                from ..kernels.tree_sampler.ops import pallas_sampler_eligible
+                elig[wid] = pallas_sampler_eligible(dev, job.wts)
+            ok, why = elig[wid]
+            if not ok:
+                job.backend, job.fallback_reason = "xla", why
+        job.n_chunks = max(1, -(-job.k // chunk))
+        job.k_eff = job.n_chunks * chunk
+        job.cursor = 0
+        job.acc = {kk: 0 for kk in _ACC_KEYS}
+        job.base_key = jax.random.PRNGKey(job.seed)
+        if int(job.wts.W_total) == 0:
+            job.cursor = job.n_chunks       # nothing to sample
+        else:
+            _load_checkpoint(job, chunk)
+        gkey = (PlanKey(job.tree, int(chunk), int(Lmax), job.backend),
+                id(job.wts))
+        if gkey not in groups:
+            groups[gkey] = JobGroup(key=gkey[0], wts=job.wts, jobs=[])
+        groups[gkey].jobs.append(job)
+    for group in groups.values():
+        for job in group.jobs:
+            job.group_size = len(group.jobs)
+    return ExecutionPlan(jobs=list(jobs), groups=list(groups.values()),
+                         dev=dev, mesh=mesh, chunk=int(chunk),
+                         Lmax=int(Lmax),
+                         checkpoint_every=max(1, int(checkpoint_every)))
+
+
+def run_plan(plan: ExecutionPlan) -> list[EstimateResult]:
+    """Execute a plan: one dispatch per (job-cohort, window); results in
+    input job order, bit-identical to sequential ``estimate()``.
+
+    Within a group, jobs whose next window coincides — same ``(j0, n)``
+    on the ``checkpoint_every``-aligned grid — form a cohort and dispatch
+    together; fresh same-budget jobs stay fused for their whole run,
+    resumed or short-budget jobs peel off into their own cohorts without
+    perturbing anyone's chunk -> key map.  Every cohort pads its key
+    stack to the GROUP width, so the compiled program sees one stable
+    ``[J, 2]`` shape across the group's whole drain (no retrace when a
+    short-budget job finishes — on real hardware a window recompile
+    costs far more than the padded lanes, which replay the lead job's
+    keys and have their sums discarded).  Fused jobs report the shared
+    dispatch wall-clock as their ``sampling_s``.
+    """
+    ce = plan.checkpoint_every
+    for group in plan.groups:
+        window_fn = cached_window_fn(group.key.tree, group.key.chunk,
+                                     Lmax=group.key.Lmax,
+                                     backend=group.key.backend,
+                                     mesh=plan.mesh)
+        active = [j for j in group.jobs if j.cursor < j.n_chunks]
+        while active:
+            cohorts: OrderedDict = OrderedDict()
+            for job in active:
+                j0 = job.cursor
+                n = min(ce - j0 % ce, job.n_chunks - j0)
+                cohorts.setdefault((j0, n), []).append(job)
+            for (j0, n), cjobs in cohorts.items():
+                pad = len(group.jobs) - len(cjobs)
+                base_keys = jnp.stack([j.base_key for j in cjobs]
+                                      + [cjobs[0].base_key] * pad)
+                t0 = time.perf_counter()
+                sums = window_fn(plan.dev, group.wts, base_keys, j0, n)
+                sums = {kk: np.asarray(sums[kk]) for kk in _ACC_KEYS}
+                dt = time.perf_counter() - t0
+                plan.dispatches += 1
+                STATS.dispatches += 1
+                STATS.job_windows += len(cjobs)
+                if len(cjobs) > 1:
+                    STATS.fused_dispatches += 1
+                for i, job in enumerate(cjobs):
+                    for kk in _ACC_KEYS:
+                        job.acc[kk] += int(sums[kk][i])
+                    job.cursor = j0 + n
+                    job.sampling_s += dt
+                    if job.checkpoint_path:
+                        _write_checkpoint(job, plan.chunk)
+            active = [j for j in active if j.cursor < j.n_chunks]
+
+    results = []
+    for job in sorted(plan.jobs, key=lambda j: j.index):
+        W = int(job.wts.W_total)
+        results.append(EstimateResult(
+            estimate=W * job.acc["cnt2"] / (2.0 * job.k_eff),
+            W=W, k=job.k_eff, valid=job.acc["valid"],
+            fail_vmap=job.acc["fail_vmap"], fail_delta=job.acc["fail_delta"],
+            fail_order=job.acc["fail_order"], overflow=job.acc["overflow"],
+            cnt2_sum=job.acc["cnt2"], motif=job.motif.name,
+            tree_edges=job.tree.edge_ids, delta=int(job.delta),
+            preprocess_s=job.preprocess_s, sampling_s=job.sampling_s,
+            tree_select_s=job.tree_select_s, sampler_backend=job.backend,
+            fallback_reason=job.fallback_reason,
+            mesh_shape=plan.mesh_shape, fused_jobs=job.group_size))
+    return results

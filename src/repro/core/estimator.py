@@ -1,32 +1,33 @@
 """End-to-end TIMEST estimation (paper Alg. 6/7).
 
-``estimate()`` = choose spanning tree -> preprocess weights -> sample in
-chunks -> validate + DeriveCnt -> rescale.  The chunk loop is restartable:
-chunk ``j`` always uses ``fold_in(base_key, j)``, so a checkpoint of
-``(chunks_done, accumulators)`` resumes bit-identically after a failure —
-the estimator-side fault-tolerance story (see train/fault_tolerance.py for
-the distributed version).
+``estimate()`` = choose spanning tree -> preprocess weights -> hand the
+job to the execution engine (core/engine.py), which samples in
+``checkpoint_every``-aligned windows of chunks.  The chunk loop is
+restartable: chunk ``j`` always uses ``fold_in(base_key, j)``, so a
+checkpoint of ``(chunks_done, accumulators)`` resumes bit-identically
+after a failure — on any mesh shape (see the engine's determinism
+contract).  All dispatch (cross-job fusion, mesh sharding, the compiled
+window program LRU) lives in the engine; this module keeps the per-job
+planning: tree selection (Alg. 7) and weight preprocessing (Alg. 1/2).
 """
 from __future__ import annotations
 
-import json
-import os
 import time
-from dataclasses import asdict, dataclass, field
+from dataclasses import dataclass
 
 from ..util import ensure_x64
 
 ensure_x64()
 
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
-
 from .graph import TemporalGraph  # noqa: E402
 from .motif import TemporalMotif  # noqa: E402
-from .sampler import make_sample_fn, sampler_backend  # noqa: E402
+from .sampler import make_sample_fn  # noqa: E402
 from .spanning_tree import SpanningTree, candidate_trees  # noqa: E402
 from .validate import make_count_fn  # noqa: E402
 from .weights import Weights, preprocess  # noqa: E402
+
+_ACC_KEYS = ("cnt2", "valid", "fail_vmap", "fail_delta", "fail_order",
+             "overflow")
 
 
 def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
@@ -37,12 +38,14 @@ def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
     lets XLA dead-code the [K, S] sample arrays straight into the DP
     instead of materializing them between calls; the chunk reduces to six
     scalars on device, so host<->device traffic per chunk is O(1)
-    (section Perf, estimator iteration C2).
+    (section Perf, estimator iteration C2).  Kept as the single-chunk
+    micro-benchmark unit; production windows dispatch through
+    ``engine.cached_window_fn``.
 
     ``sampler_backend`` ("xla" | "pallas") picks the sampling path
     *unguarded* (the fn is jitted, so the host-side eligibility check
     cannot run inside) — callers gate with
-    ``tree_sampler.ops.pallas_sampler_eligible`` first, as ``estimate``
+    ``tree_sampler.ops.pallas_sampler_eligible`` first, as the engine
     does.
     """
     import jax as _jax
@@ -54,61 +57,8 @@ def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
 
         samples = s_fn(dev, wts, key)
         out = c_fn(dev, wts, samples)
-        return {k: out[k].sum() for k in
-                ("cnt2", "valid", "fail_vmap", "fail_delta", "fail_order",
-                 "overflow")}
+        return {k: out[k].sum() for k in _ACC_KEYS}
     return _jax.jit(fn)
-
-
-def make_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
-                   sampler_backend: str | None = None):
-    """``fn(dev, wts, base_key, j0, n)``: chunks ``j0 .. j0+n-1`` in ONE
-    dispatch via ``jax.lax.scan`` over folded keys (estimator iteration C3).
-
-    Chunk ``j`` still draws from ``fold_in(base_key, j)`` — bit-identical
-    to the per-chunk host loop, so checkpoints written at window edges
-    resume exactly.  ``n`` is static (one compile per distinct window
-    length: the ``checkpoint_every`` window + at most one tail/resume
-    remainder); ``j0`` is traced, so resuming mid-stream never recompiles.
-
-    ``sampler_backend="pallas"`` swaps the scanned sampler for the fused
-    kernels/tree_sampler ``pallas_call`` (unguarded — see
-    ``make_chunk_fn``); both backends draw bit-identical samples.
-    """
-    import jax as _jax
-    import jax.numpy as _jnp
-
-    s_fn = make_sample_fn(tree, chunk, backend=sampler_backend, guard=False)
-    c_fn = make_count_fn(tree, chunk, Lmax=Lmax)
-
-    def fn(dev, wts, base_key, j0, n):
-        def body(acc, j):
-            kj = _jax.random.fold_in(base_key, j)
-            out = c_fn(dev, wts, s_fn(dev, wts, kj))
-            acc = {k: acc[k] + out[k].sum().astype(_jnp.int64)
-                   for k in _ACC_KEYS}
-            return acc, None
-
-        acc0 = {k: _jnp.zeros((), _jnp.int64) for k in _ACC_KEYS}
-        acc, _ = _jax.lax.scan(body, acc0, j0 + _jnp.arange(n))
-        return acc
-
-    return _jax.jit(fn, static_argnames=("n",))
-
-
-_WINDOW_FN_CACHE: dict = {}
-
-
-def cached_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
-                     backend: str | None = None):
-    """Memoized ``make_window_fn`` — jobs sharing (tree, chunk, Lmax,
-    backend) reuse one compiled sampler (the batch engine's
-    dispatch-sharing path)."""
-    key = (tree, chunk, Lmax, sampler_backend(backend))
-    if key not in _WINDOW_FN_CACHE:
-        _WINDOW_FN_CACHE[key] = make_window_fn(tree, chunk, Lmax=Lmax,
-                                               sampler_backend=key[3])
-    return _WINDOW_FN_CACHE[key]
 
 
 @dataclass
@@ -129,6 +79,9 @@ class EstimateResult:
     sampling_s: float = 0.0
     tree_select_s: float = 0.0
     sampler_backend: str = "xla"   # the backend that actually sampled
+    fallback_reason: str = ""      # why the requested backend was vetoed
+    mesh_shape: tuple | None = None   # data-sharding mesh, None = 1 device
+    fused_jobs: int = 1            # jobs sharing this job's fused group
 
     @property
     def valid_rate(self) -> float:
@@ -166,10 +119,6 @@ def choose_tree(g: TemporalGraph, motif: TemporalMotif, delta: int,
     return best[1], best[2]
 
 
-_ACC_KEYS = ("cnt2", "valid", "fail_vmap", "fail_delta", "fail_order",
-             "overflow")
-
-
 def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
              seed: int = 0, tree: SpanningTree | None = None,
              n_candidates: int = 3, chunk: int = 8192, Lmax: int = 16,
@@ -177,7 +126,8 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
              checkpoint_path: str | None = None, checkpoint_every: int = 64,
              dev: dict | None = None,
              wts: Weights | None = None,
-             sampler_backend: str | None = None) -> EstimateResult:
+             sampler_backend: str | None = None,
+             mesh=None) -> EstimateResult:
     """Alg. 6: the full TIMEST estimate with ``k`` samples.
 
     ``wts`` (with ``tree``) injects precomputed weights — the batch
@@ -188,8 +138,13 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
     kernels/tree_sampler Pallas kernel; results are bit-identical.  The
     pallas path silently downgrades to xla when the job sits outside the
     kernel envelope (weights past f32-exact 2^24, time bounds past int32,
-    or VMEM budget) — the backend actually used is recorded on the
-    result.
+    or VMEM budget) — the backend actually used and the veto reason are
+    recorded on the result.
+
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g. from
+    ``launch.mesh.make_estimator_mesh``) shards each window's chunk range
+    over the mesh's data axes; the estimate stays bit-identical to the
+    unsharded run (engine determinism contract).
     """
     if dev is None:
         dev = g.device_arrays()
@@ -209,70 +164,13 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
                          use_c3=use_c3)
         t_pre = time.perf_counter() - t1
 
-    from .sampler import sampler_backend as _resolve_backend
-    sb = _resolve_backend(sampler_backend)
-    if sb == "pallas":
-        from ..kernels.tree_sampler.ops import pallas_sampler_eligible
-        ok, _why = pallas_sampler_eligible(dev, wts)
-        if not ok:
-            sb = "xla"   # outside the kernel envelope — exact path
-
-    W = int(wts.W_total)
-    n_chunks = max(1, -(-k // chunk))
-    k_eff = n_chunks * chunk
-    acc = {kk: 0 for kk in _ACC_KEYS}
-    start_chunk = 0
-
-    if checkpoint_path and os.path.exists(checkpoint_path):
-        with open(checkpoint_path) as f:
-            st = json.load(f)
-        if (st["motif"] == motif.name and st["delta"] == delta
-                and st["seed"] == seed and st["chunk"] == chunk
-                and tuple(st["tree_edges"]) == tree.edge_ids):
-            acc = {kk: int(st["acc"][kk]) for kk in _ACC_KEYS}
-            start_chunk = int(st["chunks_done"])
-
-    result = EstimateResult(
-        estimate=0.0, W=W, k=0, valid=0, fail_vmap=0, fail_delta=0,
-        fail_order=0, overflow=0, cnt2_sum=0, motif=motif.name,
-        tree_edges=tree.edge_ids, delta=int(delta),
-        preprocess_s=t_pre, tree_select_s=t_sel, sampler_backend=sb)
-
-    if W == 0:
-        result.k = k_eff
-        return result
-
-    window_fn = cached_window_fn(tree, chunk, Lmax=Lmax, backend=sb)
-    base_key = jax.random.PRNGKey(seed)
-    checkpoint_every = max(1, int(checkpoint_every))
-
-    t2 = time.perf_counter()
-    j = start_chunk
-    while j < n_chunks:
-        # align windows to checkpoint_every boundaries so a resumed run
-        # re-enters the exact same window grid (and compiled fn) as a
-        # fresh one
-        n = min(checkpoint_every - j % checkpoint_every, n_chunks - j)
-        sums = window_fn(dev, wts, base_key, j, n)
-        for kk in _ACC_KEYS:
-            acc[kk] += int(sums[kk])
-        j += n
-        if checkpoint_path:
-            tmp = checkpoint_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(dict(motif=motif.name, delta=int(delta), seed=seed,
-                               chunk=chunk, tree_edges=list(tree.edge_ids),
-                               chunks_done=j, acc=acc), f)
-            os.replace(tmp, checkpoint_path)
-    result.sampling_s = time.perf_counter() - t2
-
-    result.k = k_eff
-    result.cnt2_sum = acc["cnt2"]
-    result.valid = acc["valid"]
-    result.fail_vmap = acc["fail_vmap"]
-    result.fail_delta = acc["fail_delta"]
-    result.fail_order = acc["fail_order"]
-    result.overflow = acc["overflow"]
-    # C^ = W * mean(cnt / N_phi); cnt2 accumulates 2*cnt/N_phi exactly.
-    result.estimate = W * result.cnt2_sum / (2.0 * k_eff)
-    return result
+    from .engine import EngineJob, plan_jobs, run_plan
+    job = EngineJob(index=0, motif=motif, delta=int(delta), k=int(k),
+                    seed=int(seed), tree=tree, wts=wts,
+                    checkpoint_path=checkpoint_path)
+    job.preprocess_s = t_pre
+    job.tree_select_s = t_sel
+    plan = plan_jobs([job], dev=dev, chunk=chunk, Lmax=Lmax,
+                     checkpoint_every=checkpoint_every, mesh=mesh,
+                     sampler_backend=sampler_backend)
+    return run_plan(plan)[0]

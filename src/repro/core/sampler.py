@@ -103,6 +103,21 @@ def make_sample_fn(tree: SpanningTree, K: int, backend: str | None = None,
     return _make_sample_fn_xla(tree, K)
 
 
+def make_batched_sample_fn(tree: SpanningTree, K: int,
+                           backend: str | None = None):
+    """``fn(dev, wts, keys [J, 2]) -> samples`` batched over a leading
+    key axis — the engine's cross-job fusion path.
+
+    ``jax.vmap`` of the unguarded single-key fn: J jobs' chunks draw
+    through ONE program (arrays come back with a leading ``[J]`` axis),
+    each job's samples bit-identical to a solo ``make_sample_fn`` call
+    with its key.  Unguarded like ``guard=False`` — the engine resolves
+    pallas eligibility per job at plan time, before keys are stacked.
+    """
+    fn = make_sample_fn(tree, K, backend=backend, guard=False)
+    return jax.vmap(fn, in_axes=(None, None, 0))
+
+
 def _make_sample_fn_xla(tree: SpanningTree, K: int):
     """The XLA gather-chain sampler (exact int64 throughout)."""
     S = tree.num_edges

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import Any
 
 import numpy as np
@@ -130,7 +130,12 @@ def _excl(x):
 # ---------------------------------------------------------------------------
 def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
                        backend: str | None = None):
-    """Build a jitted ``fn(dev, delta, wd, q) -> Weights`` for a fixed tree.
+    """Build ``fn(dev, delta, wd, q) -> weight dict`` for a fixed tree.
+
+    Two jits under the hood: the heavy [S, m] weight DP treats ``q`` as a
+    traced scalar (ONE compile per tree serves every delta), and only the
+    tiny tree-independent window-totals tail (``_window_totals_fn``) is
+    shape-specialized on ``q``.
 
     ``wd`` is the window stride (Constraint 3): windows are
     ``[i*wd, (i+2)*wd)``.  The paper's algorithm has ``wd == delta``; passing
@@ -209,13 +214,14 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
             el = (ppo[qmid] - ppo[qlo]) + (ppp[qhi] - ppp[qmid])
         return lam - el
 
-    def fn(dev, delta, wd, q):
+    def core(dev, delta, wd, q):
         m = dev["t"].shape[0]
         t = dev["t"]
         src = dev["src"].astype(jnp.int64)
         dst = dev["dst"].astype(jnp.int64)
         delta = jnp.asarray(delta, jnp.int64)
         wd = jnp.asarray(wd, jnp.int64)
+        q = jnp.asarray(q, jnp.int64)   # traced: only a scalar cutoff here
         fl = t // wd
         own_ok = fl <= q - 1
         prev_ok = fl >= 1
@@ -254,16 +260,6 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
         ps_root_prev = _excl(w_prev_l[r])
         prefix_tops += [ps_root_own[-1], ps_root_prev[-1]]
 
-        # per-window totals (Claim 4.10 restricted to window i)
-        iarr = jnp.arange(q, dtype=jnp.int64)
-        win_lo = jnp.searchsorted(t, iarr * wd, side="left")
-        win_mid = jnp.searchsorted(t, (iarr + 1) * wd, side="left")
-        win_hi = jnp.searchsorted(t, (iarr + 2) * wd, side="left")
-        W_i = ((ps_root_own[win_mid] - ps_root_own[win_lo])
-               + (ps_root_prev[win_hi] - ps_root_prev[win_mid]))
-        ps_win = _excl(W_i)
-        W_total = ps_win[-1]
-
         # stack: root slot of ps_acc_* holds the *global-order* prefix
         ps_acc_own = []
         ps_acc_prev = []
@@ -287,9 +283,7 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
             ps_acc_own=jnp.stack(ps_acc_own),
             ps_acc_prev=jnp.stack(ps_acc_prev),
             ps_pair_own=jnp.stack(ps_pair_own),
-            ps_pair_prev=jnp.stack(ps_pair_prev),
-            W_total=W_total, ps_win=ps_win,
-            win_lo=win_lo, win_mid=win_mid, win_hi=win_hi)
+            ps_pair_prev=jnp.stack(ps_pair_prev))
         if backend == "pallas":
             # exact while no prefix total left f32's integer range: every
             # intermediate value is bounded by some prefix's last element
@@ -303,7 +297,46 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
             out["exact"] = jnp.asarray(True)
         return out
 
-    return jax.jit(fn, static_argnames=("q",))
+    core_j = jax.jit(core)
+    root = tree.root
+
+    def fn(dev, delta, wd, q):
+        out = dict(core_j(dev, delta, wd, q))
+        # the q-SHAPED part is a tiny tail over the root prefixes; keeping
+        # it out of the core means one heavy compile per tree serves
+        # every delta (q is a traced scalar above, a static shape here)
+        out.update(_window_totals_fn(int(q))(
+            dev["t"], out["ps_acc_own"][root], out["ps_acc_prev"][root],
+            wd))
+        out["W_total"] = out["ps_win"][-1]
+        return out
+
+    return fn
+
+
+@lru_cache(maxsize=64)
+def _window_totals_fn(q: int):
+    """Per-window totals (Claim 4.10 restricted to window i), jitted per
+    static ``q``; memoized in a small LRU (one entry per distinct q).
+
+    Tree-independent (inputs are just the root's global-order prefixes),
+    so one compile serves every tree and candidate at a given ``q`` —
+    and it always runs on the exact int64 prefixes (on the pallas path
+    the core has already cast back), so ``ps_win``/``W_total`` never
+    round even when a window total exceeds an individual prefix top.
+    """
+    def f(t, ps_root_own, ps_root_prev, wd):
+        wd = jnp.asarray(wd, jnp.int64)
+        iarr = jnp.arange(q, dtype=jnp.int64)
+        win_lo = jnp.searchsorted(t, iarr * wd, side="left")
+        win_mid = jnp.searchsorted(t, (iarr + 1) * wd, side="left")
+        win_hi = jnp.searchsorted(t, (iarr + 2) * wd, side="left")
+        W_i = ((ps_root_own[win_mid] - ps_root_own[win_lo])
+               + (ps_root_prev[win_hi] - ps_root_prev[win_mid]))
+        return dict(ps_win=_excl(W_i), win_lo=win_lo,
+                    win_mid=win_mid, win_hi=win_hi)
+
+    return jax.jit(f)
 
 
 def num_windows(time_span: int, wd: int) -> int:
@@ -316,8 +349,9 @@ _PREPROCESS_FN_CACHE: dict = {}
 
 def cached_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
                          backend: str | None = None):
-    """Memoized ``make_preprocess_fn``: one trace/compile per
-    (tree, use_c2, backend) — the batch engine calls this per job."""
+    """Memoized ``make_preprocess_fn``: one heavy trace/compile per
+    (tree, use_c2, backend) serving every delta — the batch engine calls
+    this per job."""
     key = (tree, use_c2, depsum_backend(backend))
     if key not in _PREPROCESS_FN_CACHE:
         _PREPROCESS_FN_CACHE[key] = make_preprocess_fn(

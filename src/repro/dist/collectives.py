@@ -16,6 +16,19 @@ from jax.sharding import PartitionSpec as P
 from ..util import get_shard_map
 
 
+def folded_axis_index(mesh, axes) -> jnp.ndarray:
+    """Row-major linear shard index over ``axes`` (inside shard_map).
+
+    Folds several mesh axes — e.g. ``("pod", "data")`` — into the single
+    0-based index the estimation engine strides its chunk round-robin by;
+    with one axis it is just ``jax.lax.axis_index``.
+    """
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
 def psum_chunked(x: jnp.ndarray, axis_name, n_chunks: int = 1):
     """``jax.lax.psum`` in ``n_chunks`` sequential slabs of the flat payload.
 

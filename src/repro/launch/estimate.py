@@ -5,19 +5,32 @@
         --k 1048576 --checkpoint /tmp/timest.ckpt
 
 Batched serving mode — comma lists fan out into the full cross product
-and run through the shared-preprocess ``estimate_many`` engine:
+and run through the shared-preprocess ``estimate_many`` engine, which
+fuses jobs sharing a plan key into one dispatch per window:
 
     PYTHONPATH=src python -m repro.launch.estimate \
         --graph powerlaw:n=2000,m=40000 --motif M5-1,M5-3 \
         --delta 2000,5000 --k 262144
 
+Mesh sharding — ``--mesh auto`` (or ``--mesh D``) shards every window's
+chunk range over a 1-axis data mesh (``launch.mesh.make_estimator_mesh``)
+with bit-identical results; ``--devices N`` forces N virtual host (CPU)
+devices first, so a laptop can rehearse the 8-way layout:
+
+    PYTHONPATH=src python -m repro.launch.estimate \
+        --graph powerlaw:n=2000,m=40000 --motif M5-3 --delta 5000 \
+        --k 1048576 --devices 8 --mesh auto
+
 Graphs: ``powerlaw:...`` / ``er:...`` / ``fintxn:...`` synthetic specs or
 a path to an edge-list file.  The chunk loop checkpoints and resumes
-(fault tolerance).  ``--depsum-backend pallas`` routes weight
-preprocessing through the fused interval-weight kernel (exact-int64 XLA
-fallback on overflow); ``--sampler-backend pallas`` routes sampling
-through the fused kernels/tree_sampler kernel (one ``pallas_call`` per
-chunk, bit-identical samples, same automatic fallback rules).
+(fault tolerance — checkpoints are mesh-shape-free, so a 1-device
+checkpoint resumes on an 8-device mesh and vice versa).
+``--depsum-backend pallas`` routes weight preprocessing through the fused
+interval-weight kernel (exact-int64 XLA fallback on overflow);
+``--sampler-backend pallas`` routes sampling through the fused
+kernels/tree_sampler kernel (one ``pallas_call`` per chunk, bit-identical
+samples; ineligible jobs fall back per job without downgrading fused
+siblings).
 """
 from __future__ import annotations
 
@@ -41,6 +54,14 @@ def parse_graph(spec: str):
     return load_edge_list(spec)
 
 
+def build_mesh(spec: str | None):
+    """``--mesh`` value -> Mesh | None ("auto" = every device)."""
+    if not spec or spec == "none":
+        return None
+    from .mesh import make_estimator_mesh
+    return make_estimator_mesh(None if spec == "auto" else int(spec))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="powerlaw:n=500,m=8000")
@@ -52,6 +73,14 @@ def main() -> None:
     ap.add_argument("--chunk", type=int, default=1 << 13)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="shard chunks over a data mesh: 'auto' (all "
+                         "devices) or a shard count; results are "
+                         "bit-identical to the unsharded run")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force this many virtual host (CPU) devices "
+                         "before jax initializes — rehearse a multi-"
+                         "device mesh on one machine")
     ap.add_argument("--depsum-backend", choices=("xla", "pallas"),
                     default=None, help="weight-preprocess inner loop")
     ap.add_argument("--sampler-backend", choices=("xla", "pallas"),
@@ -63,6 +92,9 @@ def main() -> None:
     ap.add_argument("--exact", action="store_true",
                     help="also run the exact oracle (slow!)")
     args = ap.parse_args()
+    if args.devices:
+        from .mesh import force_host_device_count
+        force_host_device_count(args.devices)
     if args.depsum_backend:
         os.environ["REPRO_DEPSUM_BACKEND"] = args.depsum_backend
     if args.sampler_backend:
@@ -72,10 +104,12 @@ def main() -> None:
     from ..core.motif import get_motif
 
     g = parse_graph(args.graph)
+    mesh = build_mesh(args.mesh)
     motifs = args.motif.split(",")
     deltas = [int(d) for d in str(args.delta).split(",")]
     print(f"graph: n={g.n} m={g.m} span={g.time_span}  "
-          f"motifs={motifs} deltas={deltas}  k={args.k}")
+          f"motifs={motifs} deltas={deltas}  k={args.k}  "
+          f"mesh={mesh.shape if mesh is not None else None}")
 
     if len(motifs) > 1 or len(deltas) > 1:
         if args.checkpoint:
@@ -84,8 +118,10 @@ def main() -> None:
         from ..core.batch import estimate_many
         jobs = [(m, d, args.k) for m in motifs for d in deltas]
         exact_cache: dict = {}
-        for res in estimate_many(g, jobs, seed=args.seed, chunk=args.chunk):
-            print(f"delta={res.delta}  {res.summary()}")
+        for res in estimate_many(g, jobs, seed=args.seed, chunk=args.chunk,
+                                 mesh=mesh):
+            print(f"delta={res.delta}  fused={res.fused_jobs}  "
+                  f"{res.summary()}")
             if args.exact:
                 from ..core.exact import count_exact
                 key = (res.motif, res.delta)
@@ -99,11 +135,15 @@ def main() -> None:
 
     motif = get_motif(motifs[0])
     res = estimate(g, motif, deltas[0], args.k, seed=args.seed,
-                   chunk=args.chunk, checkpoint_path=args.checkpoint)
+                   chunk=args.chunk, checkpoint_path=args.checkpoint,
+                   mesh=mesh)
     print(res.summary())
     print(f"  fail: vmap={res.fail_vmap} delta={res.fail_delta} "
           f"order={res.fail_order} overflow={res.overflow}  "
-          f"sampler={res.sampler_backend}")
+          f"sampler={res.sampler_backend}"
+          + (f" (fallback: {res.fallback_reason})"
+             if res.fallback_reason else "")
+          + f"  mesh={res.mesh_shape}")
     if args.exact:
         from ..core.exact import count_exact
         c = count_exact(g, motif, deltas[0])

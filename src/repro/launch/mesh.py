@@ -22,3 +22,28 @@ def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_estimator_mesh(devices: int | None = None):
+    """1-axis ``("data",)`` mesh for the estimation engine (core/engine.py).
+
+    The engine only data-shards (chunks round-robin over shards, one psum
+    — no model axis), so its mesh is a flat slab over the first
+    ``devices`` devices (default: all of them).
+    """
+    n = len(jax.devices()) if devices is None else int(devices)
+    return jax.make_mesh((n,), ("data",))
+
+
+def force_host_device_count(n: int) -> None:
+    """Force ``n`` virtual XLA host (CPU) devices via ``XLA_FLAGS``.
+
+    Must run before the jax backend initializes (any ``jax.devices()`` /
+    first trace); the CLI calls it straight after argument parsing.
+    Replaces any existing ``--xla_force_host_platform_device_count``.
+    """
+    import os
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={int(n)}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)

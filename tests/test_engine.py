@@ -1,0 +1,293 @@
+"""Execution engine (core/engine.py): cross-job fusion + mesh sharding.
+
+The contract under test: the engine is a pure execution optimization —
+fusing jobs onto one vmapped window program and sharding chunk ranges
+over a mesh must return counts **bit-identical** to sequential
+``estimate()``, while issuing ONE dispatch per (job-cohort, window)
+(asserted through ``engine.STATS``).  Checkpoints are mesh-shape-free:
+a 1-device checkpoint resumes on an 8-device mesh and vice versa.
+
+Multi-device legs run in subprocesses (jax fixes the device count at
+first init); ``scripts/ci.sh`` additionally re-runs this whole file
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the
+in-process mesh tests also execute on a real 8-way host mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import engine
+from repro.core.batch import estimate_many
+from repro.core.estimator import estimate
+from repro.core.motif import get_motif
+from repro.graphs import powerlaw_temporal_graph
+from repro.launch.mesh import make_estimator_mesh
+
+DELTA = 3_000
+CHUNK = 256
+CKPT_EVERY = 2
+
+PREAMBLE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+from repro.core.estimator import estimate
+from repro.core.motif import get_motif
+from repro.graphs import powerlaw_temporal_graph
+from repro.launch.mesh import make_estimator_mesh
+g = powerlaw_temporal_graph(n=120, m=1_500, time_span=30_000, seed=5)
+mesh = make_estimator_mesh()
+assert mesh.shape["data"] == 8, mesh.shape
+"""
+
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, timeout: int = 420) -> str:
+    r = subprocess.run([sys.executable, "-c",
+                        PREAMBLE + textwrap.dedent(code)],
+                       capture_output=True, text=True, cwd=REPO,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return powerlaw_temporal_graph(n=120, m=1_500, time_span=30_000, seed=5)
+
+
+# 12-job serving workload: 2 motifs x 2 deltas x 3 budgets.  With
+# chunk=256 / checkpoint_every=2 the budgets span 2, 4 and 8 chunks, so
+# each (tree, delta) group covers windows [0,2) [2,4) [4,6) [6,8).
+JOBS_12 = [(mn, d, k)
+           for mn in ("M5-3", "M4-2")
+           for d in (DELTA, 5_000)
+           for k in (512, 1024, 2048)]
+
+
+def test_fused_bit_identical_and_one_dispatch_per_group_window(graph):
+    """estimate_many == per-job estimate(), with the dispatch count of
+    the fused plan, not of the per-job loop."""
+    engine.STATS.reset()
+    batch = estimate_many(graph, JOBS_12, seed=0, chunk=CHUNK,
+                          checkpoint_every=CKPT_EVERY)
+    # 4 (tree, delta) groups; in each, the 3 budgets fuse while active:
+    # window [0,2) carries 3 jobs, [2,4) two, [4,6) and [6,8) one — one
+    # dispatch per (job-group, window), 4 per group.
+    assert engine.STATS.dispatches == 4 * 4
+    assert engine.STATS.fused_dispatches == 4 * 2
+    # the fused plan covered every job-window the old loop would have
+    # dispatched individually (1+2+4 windows per group)
+    assert engine.STATS.job_windows == 4 * 7
+    engine.STATS.reset()
+    for (mn, d, k), rb in zip(JOBS_12, batch):
+        rs = estimate(graph, get_motif(mn), d, k, seed=0, chunk=CHUNK,
+                      checkpoint_every=CKPT_EVERY)
+        assert rb.estimate == rs.estimate
+        assert rb.cnt2_sum == rs.cnt2_sum
+        assert rb.valid == rs.valid
+        assert rb.fail_vmap == rs.fail_vmap
+        assert rb.tree_edges == rs.tree_edges
+        assert rb.fused_jobs == 3 and rb.mesh_shape is None
+        assert rs.fused_jobs == 1
+    # single-job plans dispatch exactly their own windows
+    assert engine.STATS.dispatches == engine.STATS.job_windows == 12 * 7 // 3
+
+
+def test_mesh_parity_in_process(graph):
+    """Sharded == unsharded, bit for bit, on whatever mesh this process
+    has (1 device under plain pytest; 8 under scripts/ci.sh)."""
+    mesh = make_estimator_mesh()
+    jobs = JOBS_12[:3]  # one fused group is enough in-process
+    r_plain = estimate_many(graph, jobs, seed=0, chunk=CHUNK,
+                            checkpoint_every=CKPT_EVERY)
+    r_mesh = estimate_many(graph, jobs, seed=0, chunk=CHUNK,
+                           checkpoint_every=CKPT_EVERY, mesh=mesh)
+    for a, b in zip(r_plain, r_mesh):
+        assert a.cnt2_sum == b.cnt2_sum and a.estimate == b.estimate
+        assert a.valid == b.valid and a.fail_delta == b.fail_delta
+        assert b.mesh_shape == (mesh.shape["data"],)
+        assert a.mesh_shape is None
+
+
+def test_mesh8_parity_subprocess(graph):
+    """1-device fused counts == 8-device sharded counts (forced host
+    mesh), for both sampler backends."""
+    jobs = [("M5-3", DELTA, 1024), ("M5-3", DELTA, 512)]
+    want = {}
+    for backend in ("xla", "pallas"):
+        res = estimate_many(graph, jobs, seed=0, chunk=CHUNK,
+                            checkpoint_every=CKPT_EVERY,
+                            sampler_backend=backend)
+        assert all(r.sampler_backend == backend for r in res)
+        want[backend] = [r.cnt2_sum for r in res]
+    out = run_sub(f"""
+        from repro.core.batch import estimate_many
+        got = {{}}
+        for backend in ("xla", "pallas"):
+            res = estimate_many(g, {jobs!r}, seed=0, chunk={CHUNK},
+                                checkpoint_every={CKPT_EVERY},
+                                sampler_backend=backend, mesh=mesh)
+            assert all(r.mesh_shape == (8,) for r in res)
+            assert all(r.sampler_backend == backend for r in res)
+            got[backend] = [r.cnt2_sum for r in res]
+        print(json.dumps(got))
+    """)
+    got = json.loads(out.strip().splitlines()[-1])
+    assert got == want
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_resume_across_mesh_shapes(graph, tmp_path, backend):
+    """A checkpoint written on a 1-device run resumes bit-identically on
+    a forced 8-device mesh, and vice versa."""
+    motif = get_motif("M5-3")
+    kwargs = dict(seed=0, chunk=CHUNK, checkpoint_every=CKPT_EVERY,
+                  sampler_backend=backend)
+    ref = estimate(graph, motif, DELTA, 1024, **kwargs)
+    assert ref.sampler_backend == backend
+
+    # 1-device checkpoint -> 8-device resume
+    ck1 = str(tmp_path / "one_to_eight.ckpt")
+    part = estimate(graph, motif, DELTA, 512, checkpoint_path=ck1, **kwargs)
+    assert part.k == 512
+    out = run_sub(f"""
+        res = estimate(g, get_motif("M5-3"), {DELTA}, 1024, seed=0,
+                       chunk={CHUNK}, checkpoint_every={CKPT_EVERY},
+                       sampler_backend={backend!r},
+                       checkpoint_path={ck1!r}, mesh=mesh)
+        print(json.dumps(dict(cnt2=res.cnt2_sum, valid=res.valid,
+                              est=res.estimate, mesh=res.mesh_shape)))
+    """)
+    got = json.loads(out.strip().splitlines()[-1])
+    assert got["mesh"] == [8]
+    assert got["cnt2"] == ref.cnt2_sum and got["valid"] == ref.valid
+    assert got["est"] == ref.estimate
+
+    # 8-device checkpoint -> 1-device resume
+    ck2 = str(tmp_path / "eight_to_one.ckpt")
+    run_sub(f"""
+        part = estimate(g, get_motif("M5-3"), {DELTA}, 512, seed=0,
+                        chunk={CHUNK}, checkpoint_every={CKPT_EVERY},
+                        sampler_backend={backend!r},
+                        checkpoint_path={ck2!r}, mesh=mesh)
+        assert part.k == 512, part.k
+        print("OK")
+    """)
+    res = estimate(graph, motif, DELTA, 1024, checkpoint_path=ck2, **kwargs)
+    assert res.cnt2_sum == ref.cnt2_sum and res.valid == ref.valid
+    assert res.estimate == ref.estimate
+
+
+def test_stale_larger_budget_checkpoint_rejected(graph, tmp_path):
+    """A checkpoint from a LARGER completed budget must not seed a
+    smaller run (its counts would divide by the smaller k)."""
+    motif = get_motif("M4-2")
+    kwargs = dict(seed=0, chunk=CHUNK, checkpoint_every=CKPT_EVERY)
+    ck = str(tmp_path / "stale.ckpt")
+    full = estimate(graph, motif, DELTA, 1024, checkpoint_path=ck, **kwargs)
+    assert full.k == 1024
+    small = estimate(graph, motif, DELTA, 512, checkpoint_path=ck, **kwargs)
+    fresh = estimate(graph, motif, DELTA, 512, **kwargs)
+    assert small.k == 512
+    assert small.cnt2_sum == fresh.cnt2_sum
+    assert small.estimate == fresh.estimate
+    # equal-budget rerun IS a valid resume: zero new sampling, same result
+    rerun = estimate(graph, motif, DELTA, 1024, checkpoint_path=ck, **kwargs)
+    assert rerun.cnt2_sum == full.cnt2_sum
+
+
+def test_engine_rejects_non_data_mesh():
+    """A mesh with non-data extent fails loudly instead of silently
+    recomputing every chunk per model shard."""
+    import jax
+
+    from repro.core.spanning_tree import candidate_trees
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices to build a model axis")
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    tree = candidate_trees(get_motif("M5-3"), n_candidates=1,
+                           roots_per_tree=1)[0]
+    with pytest.raises(ValueError, match="data-only"):
+        engine.make_engine_window_fn(tree, CHUNK, mesh=mesh)
+
+
+def test_pallas_veto_splits_group_not_batch(monkeypatch):
+    """A pallas-ineligible job downgrades ALONE: its fused siblings keep
+    the kernel, and the veto reason lands on the result."""
+    from repro.core.batch import BatchPlanner
+    from repro.kernels.tree_sampler.ops import pallas_sampler_eligible
+
+    # hub-star M5-1 at a huge delta pushes W far beyond f32-exact 2^24;
+    # a small delta on the same motif stays inside the envelope
+    g = powerlaw_temporal_graph(n=80, m=4_000, time_span=20_000, seed=5)
+    planner = BatchPlanner(g)
+    small, big = 50, 10_000
+    t_small, w_small = planner.plan(get_motif("M5-1"), small)
+    t_big, w_big = planner.plan(get_motif("M5-1"), big)
+    ok_s, _ = pallas_sampler_eligible(planner.dev, w_small)
+    ok_b, why_b = pallas_sampler_eligible(planner.dev, w_big)
+    assert ok_s and not ok_b, (ok_s, ok_b)   # the scenario this test needs
+
+    jobs = [("M5-1", small, 512), ("M5-1", big, 512)]
+    res = estimate_many(g, jobs, seed=0, chunk=CHUNK,
+                        checkpoint_every=CKPT_EVERY, planner=planner,
+                        sampler_backend="pallas")
+    assert res[0].sampler_backend == "pallas"
+    assert res[0].fallback_reason == ""
+    assert res[1].sampler_backend == "xla"
+    assert res[1].fallback_reason == why_b
+    # bit-identical to the sequential path either way
+    for (mn, d, k), rb in zip(jobs, res):
+        rs = estimate(g, get_motif(mn), d, k, seed=0, chunk=CHUNK,
+                      checkpoint_every=CKPT_EVERY)
+        assert rb.cnt2_sum == rs.cnt2_sum and rb.estimate == rs.estimate
+
+
+def test_window_fn_lru_bounded(graph, monkeypatch):
+    """The compiled-program cache is an LRU bounded by REPRO_ENGINE_CACHE
+    and keyed on the full plan key."""
+    from repro.core.spanning_tree import candidate_trees
+
+    monkeypatch.setenv("REPRO_ENGINE_CACHE", "2")
+    engine.clear_window_cache()
+    trees = candidate_trees(get_motif("M5-3"), n_candidates=3,
+                            roots_per_tree=1)
+    fn0 = engine.cached_window_fn(trees[0], CHUNK)
+    assert engine.cached_window_fn(trees[0], CHUNK) is fn0   # hit
+    engine.cached_window_fn(trees[1], CHUNK)
+    engine.cached_window_fn(trees[2], CHUNK)                 # evicts trees[0]
+    assert len(engine._WINDOW_FN_LRU) == 2
+    assert engine.cached_window_fn(trees[0], CHUNK) is not fn0
+    # distinct Lmax / backend / mesh are distinct plan keys, not clashes
+    engine.clear_window_cache()
+    monkeypatch.setenv("REPRO_ENGINE_CACHE", "32")
+    a = engine.cached_window_fn(trees[0], CHUNK, Lmax=16)
+    b = engine.cached_window_fn(trees[0], CHUNK, Lmax=8)
+    c = engine.cached_window_fn(trees[0], CHUNK, backend="pallas")
+    d = engine.cached_window_fn(trees[0], CHUNK,
+                                mesh=make_estimator_mesh())
+    assert len({id(x) for x in (a, b, c, d)}) == 4
+    engine.clear_window_cache()
+
+
+def test_engine_w_zero_job(graph):
+    """A zero-weight job short-circuits (no dispatch) but keeps its
+    budgeted k and zero counts — same as the old estimator path."""
+    engine.STATS.reset()
+    # delta=1 admits no adjacent edge pair on this sparse graph: W == 0
+    res = estimate(graph, get_motif("M5-3"), 1, 512, chunk=CHUNK)
+    assert res.W == 0 and res.k == 512
+    assert res.estimate == 0.0 and res.cnt2_sum == 0
+    assert engine.STATS.dispatches == 0
