@@ -11,11 +11,11 @@ planted structures make the counts strikingly non-null vs a clean
 background control — the paper's motivating use case (Fig. 1, refs
 [6, 29, 52, 56]).
 
-All six screens (3 motifs x 2 graphs) run through the batched
-``estimate_many`` front-end of the execution engine: per graph, one
-shared upload + deduplicated preprocessing.  The three motifs resolve to
-distinct spanning trees, so they stay separate fused groups here
-(``fused=1`` per result — jobs only fuse when they share a tree and
+All six screens (3 motifs x 2 graphs) run through a per-graph
+``Session`` (repro.api): one resident upload + preprocess cache, and the
+three submits coalesce into ONE engine plan per graph.  The motifs
+resolve to distinct spanning trees, so they stay separate fused groups
+here (``fused=1`` per result — jobs only fuse when they share a tree and
 weights, e.g. several budgets/seeds of one motif).  ``--mesh auto``
 shards every window's chunk range over the device mesh (``--devices N``
 forces N virtual host devices first) — counts are bit-identical either
@@ -30,14 +30,17 @@ MOTIFS = ("M5-3", "scatter-gather", "bipartite")
 
 
 def screen(g, label: str, delta: int, mesh) -> None:
-    from repro.core.batch import estimate_many
+    from repro.api import Request, Session
 
     print(f"\n=== {label}: n={g.n} accounts, m={g.m} transfers ===")
-    jobs = [(name, delta, 1 << 15) for name in MOTIFS]
-    for name, res in zip(MOTIFS, estimate_many(g, jobs, seed=0, mesh=mesh)):
-        print(f"  {name:16s} C^ = {res.estimate:12.1f}   "
-              f"(valid {100 * res.valid_rate:5.1f}%, W={res.W}, "
-              f"fused={res.fused_jobs}, mesh={res.mesh_shape})")
+    with Session(g, mesh=mesh) as session:
+        handles = [session.submit(Request(name, delta, k=1 << 15, seed=0))
+                   for name in MOTIFS]
+        for name, h in zip(MOTIFS, handles):
+            res = h.result()
+            print(f"  {name:16s} C^ = {res.estimate:12.1f}   "
+                  f"(valid {100 * res.valid_rate:5.1f}%, W={res.W}, "
+                  f"fused={res.fused_jobs}, mesh={res.mesh_shape})")
 
 
 def main() -> None:

@@ -16,7 +16,7 @@ import jax                                             # noqa: E402
 import jax.numpy as jnp                                # noqa: E402
 import numpy as np                                     # noqa: E402
 
-from repro.core.batch import sample_matches_many       # noqa: E402
+from repro.api import Session                          # noqa: E402
 from repro.graphs import fintxn_temporal_graph         # noqa: E402
 from repro.models import gnn                           # noqa: E402
 from repro.train.optimizer import AdamWConfig, adamw_init  # noqa: E402
@@ -26,12 +26,14 @@ from repro.train.steps import make_train_step          # noqa: E402
 def motif_features(g, motif_names, delta, K=1 << 13, seed=0):
     """[n, len(motifs)] estimated per-node motif participation counts.
 
-    One batched pass through the estimation engine: the graph uploads
-    once and motifs sharing a (tree, delta) preprocess once.
+    One ``Session.sample_matches`` pass: the graph uploads once and
+    motifs sharing a (tree, delta) preprocess once through the session's
+    shared cache.
     """
     feats = np.zeros((g.n, len(motif_names)), np.float64)
-    batches = sample_matches_many(g, [(name, delta) for name in motif_names],
-                                  K, seed=seed)
+    with Session(g) as session:
+        batches = session.sample_matches(
+            [(name, delta) for name in motif_names], K, seed=seed)
     for j, b in enumerate(batches):
         # attribute each valid sample's count to its matched vertices
         cnt = np.asarray(b["cnt2"])            # [K]

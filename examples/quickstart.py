@@ -1,15 +1,22 @@
-"""Quickstart: estimate a temporal motif count and check it against exact.
+"""Quickstart: the session-based TIMEST API end to end.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One ``Session`` holds the graph on device with its preprocess cache and
+compiled programs; requests submitted into one coalescing window fuse
+into shared dispatches, ``stream()`` yields progressive per-window
+estimates, and ``target_rse`` grows the sample budget until the
+empirical error target is met.  The final estimate is checked against
+the exact (slow) oracle.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.estimator import estimate          # noqa: E402
-from repro.core.exact import count_exact           # noqa: E402
-from repro.core.motif import get_motif             # noqa: E402
-from repro.graphs import powerlaw_temporal_graph   # noqa: E402
+from repro.api import EstimateConfig, Request, Session  # noqa: E402
+from repro.core.exact import count_exact                # noqa: E402
+from repro.core.motif import get_motif                  # noqa: E402
+from repro.graphs import powerlaw_temporal_graph        # noqa: E402
 
 
 def main() -> None:
@@ -24,8 +31,35 @@ def main() -> None:
     print(f"motif: {motif.name} ({motif.num_vertices} vertices, "
           f"{motif.num_edges} edges), delta={delta}")
 
-    res = estimate(g, motif, delta, k=1 << 15, seed=0)
-    print(f"\nTIMEST:  {res.summary()}")
+    cfg = EstimateConfig(chunk=4_096, checkpoint_every=2)
+    with Session(g, cfg) as session:
+        # two budgets of the same motif coalesce: they share a plan key,
+        # so each checkpoint window is ONE fused dispatch for both
+        h_main = session.submit(Request(motif, delta, k=1 << 15, seed=0))
+        h_half = session.submit(Request(motif, delta, k=1 << 14, seed=0))
+
+        # an inline-DSL motif (the 3-cycle) rides in the same window
+        h_tri = session.submit(Request("0-1,1-2,2-0", delta, k=1 << 13))
+
+        print("\nprogressive estimate (one snapshot per checkpoint window):")
+        for snap in h_main.stream():
+            rse = f"{snap.rse:.3f}" if snap.rse != float("inf") else "--"
+            print(f"  k={snap.k_done:6d}  C^={snap.estimate:10.1f}  "
+                  f"rse={rse}")
+
+        res = h_main.result()
+        print(f"\nTIMEST:  {res.summary()}")
+        print(f"         fused_jobs={res.fused_jobs}  "
+              f"half-budget C^={h_half.result().estimate:.1f}  "
+              f"triangles C^={h_tri.result().estimate:.1f}")
+
+        # error-targeted budget: start tiny, grow until RSE <= 10%
+        h_adapt = session.submit(Request(motif, delta, k=1 << 12,
+                                         target_rse=0.10, k_max=1 << 17))
+        ra = h_adapt.result()
+        print(f"adaptive: met rse={h_adapt.rse:.3f} at k={ra.k} "
+              f"(started at {1 << 12})")
+        print(f"session:  {session.stats}")
 
     exact = count_exact(g, motif, delta)
     err = abs(res.estimate - exact) / max(exact, 1)

@@ -32,6 +32,30 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q tests/test_engine.py
 
+# serving front-end: pipe 3 NDJSON requests (catalog motif, inline DSL
+# motif, adaptive target_rse) through a real --serve process and assert
+# three well-formed ok responses come back
+printf '%s\n' \
+    '{"id":1,"motif":"M5-3","delta":3000,"k":1024}' \
+    '{"id":2,"motif":"0-1,1-2,2-0","delta":3000,"k":1024}' \
+    '{"id":3,"motif":"M4-2","delta":3000,"k":512,"target_rse":0.5,"k_max":4096}' \
+  | PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.estimate --graph powerlaw:n=150,m=2000 \
+        --serve --chunk 256 \
+  | PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -c '
+import json, sys
+lines = [ln for ln in sys.stdin if ln.strip()]
+assert len(lines) == 3, f"want 3 responses, got {len(lines)}: {lines}"
+ids = set()
+for ln in lines:
+    r = json.loads(ln)
+    assert r["ok"], r
+    assert "estimate" in r and r["W"] > 0 and r["k"] > 0, r
+    ids.add(r["id"])
+assert ids == {1, 2, 3}, ids
+print("serve smoke OK")
+'
+
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite batch --fast
@@ -39,4 +63,6 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python -m benchmarks.run --suite sampler --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite engine --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite serve --fast
 fi

@@ -1,0 +1,96 @@
+"""Public session-based TIMEST API — the canonical usage guide.
+
+TIMEST's value proposition is interactive-speed approximate counting,
+and real workloads are *streams of related count queries* over one
+resident graph (odeN-style multi-motif serving).  This package is the
+public surface for that: a long-lived :class:`Session` that keeps the
+graph on device, the preprocess cache warm and the compiled window
+programs alive between requests, instead of the old one-shot kwargs
+sprawl.
+
+Quick start
+-----------
+::
+
+    from repro.api import EstimateConfig, Request, Session
+    from repro.graphs import powerlaw_temporal_graph
+
+    g = powerlaw_temporal_graph(n=2_000, m=40_000, time_span=1_000_000)
+
+    with Session(g, EstimateConfig(chunk=8192)) as s:
+        # submits coalesce: requests landing in one window that share a
+        # plan key (same spanning tree/weights) fuse into ONE vmapped
+        # dispatch per checkpoint window, exactly like estimate_many
+        h1 = s.submit(Request("M5-3", delta=50_000, k=1 << 18))
+        h2 = s.submit(Request("M5-3", delta=50_000, k=1 << 18, seed=1))
+        print(h1.result().summary())
+
+        # inline motif DSL: "u-v" directed edges, comma-separated, in
+        # temporal (pi) order — no need to touch the catalog
+        h3 = s.submit(Request("0-1,1-2,2-0", delta=50_000, k=1 << 16))
+
+        # progressive results: one snapshot per checkpoint window
+        for snap in h3.stream():
+            print(f"k={snap.k_done}  C^={snap.estimate:.4g}  "
+                  f"rse={snap.rse:.3f}")
+
+        # error-targeted adaptive budget: k grows geometrically until
+        # the empirical relative standard error crosses the target
+        h4 = s.submit(Request("M5-1", delta=50_000, k=1 << 14,
+                              target_rse=0.05, k_max=1 << 22))
+        res = h4.result()
+        print(res.k, h4.rse)
+
+Key objects
+-----------
+``EstimateConfig`` (api/config.py)
+    One frozen config instead of per-call kwargs; ``REPRO_*`` env
+    defaults are resolved exactly once, at session construction.
+``Session`` (api/session.py)
+    Owns the device upload, the ``(tree, delta, wd, use_c2, backend)``
+    preprocess cache, the engine plan/LRU state and an optional mesh
+    (pass ``mesh=launch.mesh.make_estimator_mesh()`` to shard every
+    window's chunk range over the mesh's data axes).
+``Request`` / ``Handle`` / ``Progress``
+    ``submit(Request) -> Handle``; ``Handle.result()`` blocks,
+    ``Handle.stream()`` yields per-window :class:`Progress` snapshots,
+    ``Handle.rse`` is the live batch-means error measure.
+
+Coalescing-window semantics
+---------------------------
+A submit window stays open ``coalesce_window_s`` seconds or until
+``coalesce_max_requests`` are pending, whichever closes first; any
+``result()``/``stream()``/``flush()`` closes it early.  Draining runs
+every pending request through ``core.engine.plan_jobs``/``run_plan`` in
+ONE plan, so window-mates sharing a plan key fuse.
+
+Determinism contract
+--------------------
+Coalescing, fusion, adaptive growth and mesh sharding are pure execution
+optimizations: chunk ``j`` of a request always draws from
+``fold_in(PRNGKey(seed), j)``, so every result is bit-identical to a
+solo ``estimate()`` with the same seed and the same final budget — on
+any mesh shape, in any submit order.  Adaptive rounds RESUME from the
+previous round's ``(chunks_done, acc)`` cursor; no sample is ever drawn
+twice.
+
+Compatibility shims
+-------------------
+``repro.core.estimator.estimate`` and ``repro.core.batch.estimate_many``
+are thin wrappers that build a one-shot ``Session`` per call —
+bit-identical to their pre-session behavior (pinned by
+tests/test_api.py golden values).  New code should hold a ``Session``.
+
+Serving
+-------
+``python -m repro.launch.estimate --graph ... --serve`` wraps a session
+in a line-delimited-JSON stdin/stdout loop (see api/serve.py for the
+wire protocol) so one persistent process serves many queries against a
+resident graph.
+"""
+from .config import EstimateConfig
+from .serve import serve_loop
+from .session import Handle, Progress, Request, Session, SessionStats
+
+__all__ = ["EstimateConfig", "Handle", "Progress", "Request", "Session",
+           "SessionStats", "serve_loop"]

@@ -1,0 +1,100 @@
+"""Frozen estimation configs — the ONE place ``REPRO_*`` env defaults
+are resolved for the public API.
+
+Before the session redesign every entry point carried its own kwargs
+sprawl (``chunk``, ``Lmax``, ``checkpoint_every``, ``sampler_backend``,
+...) and four ``REPRO_*`` env vars were consulted ad hoc deep inside
+``core/``.  The public surface now passes a frozen :class:`EstimateConfig`
+around instead; ``EstimateConfig.resolve()`` (called once, at
+``Session`` construction) is where the environment is consulted:
+
+* ``REPRO_SAMPLER_BACKEND``  -> ``sampler_backend`` ("xla" | "pallas")
+* ``REPRO_DEPSUM_BACKEND``   -> ``depsum_backend``  ("xla" | "pallas")
+
+so everything below the API layer receives explicit values and core code
+never needs to re-read the environment mid-run.  (The remaining
+``REPRO_*`` knobs — ``REPRO_ENGINE_CACHE``, ``REPRO_BISECT_ITERS``,
+``REPRO_SAMPLER_VMEM_MB``, ``REPRO_SAMPLER_BLOCK`` — are process-level
+tuning parameters read where they apply; they change performance, never
+results, so they stay out of the result-affecting config surface.)
+
+Configs are frozen dataclasses: hashable, comparable, safe to use as
+cache keys and to share across sessions.  ``replace()`` (the stdlib
+``dataclasses.replace``) derives variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from ..core.sampler import sampler_backend as _resolve_sampler_backend
+from ..core.weights import depsum_backend as _resolve_depsum_backend
+
+
+@dataclass(frozen=True)
+class EstimateConfig:
+    """Session-wide estimation parameters (one frozen object, no kwargs).
+
+    Execution grid
+    --------------
+    chunk             samples per dispatchable chunk (the vmap width)
+    Lmax              DP path-count cap in the validator
+    checkpoint_every  chunks per window: the engine dispatches (and the
+                      session streams / checkpoints / measures RSE) at
+                      this granularity
+
+    Planning
+    --------
+    n_candidates, roots_per_tree   Alg. 7 tree-candidate search width
+    use_c2, use_c3                 constraint toggles (paper Table 6)
+
+    Backends (``None`` = resolve from env in :meth:`resolve`)
+    --------
+    sampler_backend   "xla" | "pallas" — the fused tree_sampler kernel
+    depsum_backend    "xla" | "pallas" — the interval_weight kernel
+
+    Serving
+    -------
+    seed                   default PRNG seed for requests that carry none
+    coalesce_window_s      a submit window stays open this long: requests
+                           arriving within it drain together (and fuse
+                           when they share a plan key)
+    coalesce_max_requests  ... or until this many requests are pending
+    rse_growth             adaptive-budget growth factor: a
+                           ``target_rse`` request multiplies its sample
+                           budget by this until the empirical RSE meets
+                           the target or ``k_max`` is reached
+    k_max_factor           default ``k_max = k_max_factor * k`` for
+                           ``target_rse`` requests that set no ``k_max``
+    """
+
+    chunk: int = 8192
+    Lmax: int = 16
+    checkpoint_every: int = 64
+    n_candidates: int = 3
+    roots_per_tree: int = 2
+    use_c2: bool = True
+    use_c3: bool = True
+    sampler_backend: str | None = None
+    depsum_backend: str | None = None
+    seed: int = 0
+    coalesce_window_s: float = 0.05
+    coalesce_max_requests: int = 64
+    rse_growth: float = 2.0
+    k_max_factor: int = 64
+
+    def resolve(self) -> "EstimateConfig":
+        """Fill env-derived defaults (the only env read in the API layer).
+
+        Returns a config whose ``sampler_backend``/``depsum_backend`` are
+        concrete strings; validation errors (unknown backend names) raise
+        here, at session construction, not mid-run.
+        """
+        return dataclasses.replace(
+            self,
+            sampler_backend=_resolve_sampler_backend(self.sampler_backend),
+            depsum_backend=_resolve_depsum_backend(self.depsum_backend),
+        )
+
+    def replace(self, **changes) -> "EstimateConfig":
+        return dataclasses.replace(self, **changes)

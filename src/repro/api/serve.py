@@ -1,0 +1,231 @@
+"""Line-delimited-JSON serving loop over a :class:`Session`.
+
+``launch/estimate.py --serve`` exposes a persistent process that answers
+many count queries against one resident graph: one JSON object per line
+on stdin, one JSON response per line on stdout (stderr carries logs).
+
+Request lines::
+
+    {"id": 1, "motif": "M5-3", "delta": 4000, "k": 65536}
+    {"id": 2, "motif": "0-1,1-2,2-0", "delta": 4000, "k": 65536,
+     "seed": 7}
+    {"id": 3, "motif": "M4-2", "delta": 2000, "k": 4096,
+     "target_rse": 0.1, "k_max": 1048576}
+
+``motif`` accepts catalog names or inline edge-list specs (the
+``core.motif`` DSL).  Optional fields: ``id`` (echoed back), ``seed``,
+``target_rse``/``k_max`` (adaptive budgets).  Unknown fields are
+rejected (``checkpoint_path`` in particular stays CLI/library-only: a
+request line must not name server-side files to overwrite).
+
+Control lines: ``{"cmd": "stats"}`` (session counters), ``{"cmd":
+"quit"}`` (drain + exit; EOF does the same).
+
+Responses (one line each, in request order within a window)::
+
+    {"id": 1, "ok": true, "estimate": 4636.58, "W": 412857, "k": 65536,
+     "valid": 27210, "rse": 0.18, "motif": "M5-3", "delta": 4000,
+     "sampler_backend": "xla", "fused_jobs": 2, "windows": 8}
+
+Malformed or failing requests answer ``{"id": ..., "ok": false,
+"error": "..."}`` and never kill the server.
+
+Coalescing: the loop blocks for the first request, then keeps reading
+until the session's coalescing window closes (``coalesce_window_s`` of
+wall-clock or ``coalesce_max_requests`` pending), drains, and emits the
+whole window's responses — concurrent requests sharing a plan key fuse
+into one vmapped dispatch per window exactly as in ``estimate_many``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import select
+import sys
+import time
+from typing import IO
+
+from .session import Handle, Request, Session
+
+
+class _LineSource:
+    """Line reader with timeouts over a file object.
+
+    Real pipes/ttys go through ``select`` + ``os.read`` on the raw fd
+    (Python-level buffering would hide buffered lines from ``select``);
+    fd-less streams (``io.StringIO`` in tests) fall back to plain
+    ``readline``, treating all input as immediately available.
+
+    ``readline(timeout)`` -> line str WITH its trailing newline (so a
+    blank line is ``"\\n"``, distinguishable from EOF), ``None`` on
+    timeout, ``""`` only at EOF.
+    """
+
+    def __init__(self, f: IO):
+        self._f = f
+        try:
+            self._fd: int | None = f.fileno()
+        except (AttributeError, OSError, ValueError):
+            self._fd = None
+        self._buf = b""
+        self._eof = False
+
+    def readline(self, timeout: float | None = None) -> str | None:
+        if self._fd is None:
+            return self._f.readline()          # "" only at EOF
+        # the timeout is a TOTAL deadline for producing one line, not a
+        # per-select re-arm — a client trickling bytes cannot hold the
+        # coalescing window open past it
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if b"\n" in self._buf:
+                line, _, self._buf = self._buf.partition(b"\n")
+                return line.decode("utf-8", "replace") + "\n"
+            if self._eof:
+                line, self._buf = self._buf, b""
+                return line.decode("utf-8", "replace")  # "" at true EOF
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                ready, _, _ = select.select([self._fd], [], [], remaining)
+                if not ready:
+                    return None
+            data = os.read(self._fd, 1 << 16)
+            if not data:
+                self._eof = True
+            else:
+                self._buf += data
+
+
+def _response(rid, handle: Handle) -> dict:
+    res = handle.result()
+    rse = handle.rse
+    return dict(
+        id=rid, ok=True, estimate=res.estimate, W=res.W, k=res.k,
+        valid=res.valid, rse=None if math.isinf(rse) else rse,
+        motif=res.motif, delta=res.delta,
+        sampler_backend=res.sampler_backend,
+        fallback_reason=res.fallback_reason, fused_jobs=res.fused_jobs,
+        windows=handle.windows)
+
+
+_REQUEST_FIELDS = frozenset(
+    ("id", "motif", "delta", "k", "seed", "target_rse", "k_max"))
+
+
+def _parse_request(obj: dict) -> Request:
+    for k in ("motif", "delta", "k"):
+        if k not in obj:
+            raise ValueError(f"request missing required field {k!r}")
+    unknown = set(obj) - _REQUEST_FIELDS
+    if unknown:
+        # checkpoint_path is deliberately NOT exposed on the wire: it
+        # names a server-side file to create/overwrite, which an
+        # untrusted request line must never control (CLI/library only)
+        raise ValueError(f"unknown request field(s) {sorted(unknown)}; "
+                         f"accepted: {sorted(_REQUEST_FIELDS)}")
+    return Request(
+        motif=str(obj["motif"]), delta=int(obj["delta"]), k=int(obj["k"]),
+        seed=None if obj.get("seed") is None else int(obj["seed"]),
+        target_rse=(None if obj.get("target_rse") is None
+                    else float(obj["target_rse"])),
+        k_max=None if obj.get("k_max") is None else int(obj["k_max"]))
+
+
+def _stats(session: Session) -> dict:
+    s = session.stats
+    return dict(ok=True, cmd="stats", submitted=s.submitted,
+                completed=s.completed, drains=s.drains,
+                dispatches=s.dispatches, adaptive_rounds=s.adaptive_rounds,
+                preprocess_calls=session.planner.preprocess_calls,
+                preprocess_hits=session.planner.preprocess_hits)
+
+
+def serve_loop(session: Session, infile: IO = None, outfile: IO = None
+               ) -> int:
+    """Run the NDJSON request/response loop until EOF or ``quit``.
+
+    Returns the number of estimation requests answered.
+    """
+    src = _LineSource(sys.stdin if infile is None else infile)
+    out = sys.stdout if outfile is None else outfile
+    pending: list[tuple] = []          # (id, Handle)
+    served = 0
+
+    def emit(obj: dict) -> None:
+        out.write(json.dumps(obj) + "\n")
+        try:
+            out.flush()
+        except Exception:
+            pass
+
+    def drain() -> None:
+        nonlocal served
+        try:
+            session.flush()
+        except Exception:        # noqa: BLE001 — the server stays up; each
+            pass                 # failed handle answers ok:false below
+        for rid, h in pending:
+            try:
+                emit(_response(rid, h))
+            except Exception as e:       # noqa: BLE001 — server stays up
+                emit(dict(id=rid, ok=False, error=f"{type(e).__name__}: {e}"))
+            served += 1
+        pending.clear()
+
+    quit_seen = False
+    while not quit_seen:
+        # block for the window's first request; afterwards poll with the
+        # window's remaining lifetime so a quiet client closes it
+        age = session.window_age()
+        if pending and age is None:     # session auto-drained (count-closed)
+            drain()
+            continue
+        timeout = (None if not pending
+                   else max(0.0, session.config.coalesce_window_s - age))
+        line = src.readline(timeout)
+        if line is None or (line == "" and pending):   # window expired/EOF
+            drain()
+            if line == "":
+                break
+            continue
+        if line == "":                  # EOF with nothing pending
+            break
+        line = line.strip()
+        if not line:                    # blank line: skip, keep serving
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            emit(dict(ok=False, error=f"bad json: {e}"))
+            continue
+        cmd = obj.get("cmd")
+        if cmd == "quit":
+            drain()
+            emit(dict(ok=True, cmd="quit", served=served))
+            quit_seen = True
+        elif cmd == "stats":
+            drain()                     # deterministic ordering
+            emit(_stats(session))
+        elif cmd is not None:
+            emit(dict(ok=False, error=f"unknown cmd {cmd!r}"))
+        else:
+            rid = obj.get("id")
+            try:
+                req = _parse_request(obj)
+                # validate the motif before it reaches the drain, so the
+                # error answers THIS line instead of poisoning the window
+                if isinstance(req.motif, str):
+                    from ..core.motif import get_motif
+                    get_motif(req.motif)
+                pending.append((rid, session.submit(req)))
+                if session.window_age() is None:    # count-closed mid-add
+                    drain()
+            except Exception as e:       # noqa: BLE001
+                emit(dict(id=rid, ok=False,
+                          error=f"{type(e).__name__}: {e}"))
+    if pending:
+        drain()
+    return served

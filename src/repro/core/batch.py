@@ -24,7 +24,6 @@ fused dispatch or mesh shard executes it (engine determinism contract).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Iterable, Sequence
 
@@ -139,29 +138,26 @@ def estimate_many(g: TemporalGraph, jobs: Iterable, seed: int = 0,
     its fused siblings).  ``mesh`` shards every window's chunk range over
     the mesh's data axes.  Jobs sharing a plan key run fused: one
     dispatch covers a whole ``checkpoint_every`` window of ALL of them.
-    """
-    jobs = [as_job(j) for j in jobs]
-    if planner is None:
-        planner = BatchPlanner(g, dev=dev, n_candidates=n_candidates,
-                               use_c2=use_c2, use_c3=use_c3, backend=backend)
-    dev = planner.dev
 
-    from .engine import EngineJob, plan_jobs, run_plan
-    engine_jobs = []
-    for i, job in enumerate(jobs):
-        t0 = time.perf_counter()
-        tree, wts = planner.plan(job.motif, job.delta)
-        t_plan = time.perf_counter() - t0
-        ej = EngineJob(index=i, motif=job.motif, delta=int(job.delta),
-                       k=int(job.k),
-                       seed=int(seed if job.seed is None else job.seed),
-                       tree=tree, wts=wts)
-        ej.tree_select_s = t_plan
-        engine_jobs.append(ej)
-    plan = plan_jobs(engine_jobs, dev=dev, chunk=chunk, Lmax=Lmax,
-                     checkpoint_every=checkpoint_every, mesh=mesh,
-                     sampler_backend=sampler_backend)
-    return run_plan(plan)
+    This is a compatibility shim over the session API (repro.api): the
+    whole batch becomes ONE submit window of a one-shot ``Session``
+    (``submit_many`` — never split by coalescing limits), bit-identical
+    to the pre-session implementation.  Serving loops handling rolling
+    request streams should hold a ``Session`` directly.
+    """
+    from ..api import EstimateConfig, Request, Session
+    jobs = [as_job(j) for j in jobs]
+    cfg = EstimateConfig(chunk=chunk, Lmax=Lmax,
+                         checkpoint_every=checkpoint_every,
+                         n_candidates=n_candidates, use_c2=use_c2,
+                         use_c3=use_c3, sampler_backend=sampler_backend,
+                         depsum_backend=backend, seed=int(seed))
+    session = Session(g, cfg, dev=dev, mesh=mesh, planner=planner)
+    handles = session.submit_many([
+        Request(motif=j.motif, delta=int(j.delta), k=int(j.k),
+                seed=int(seed if j.seed is None else j.seed))
+        for j in jobs])
+    return [h.result() for h in handles]
 
 
 def sample_matches_many(g: TemporalGraph, specs: Sequence, K: int,

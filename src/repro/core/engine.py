@@ -223,6 +223,11 @@ class EngineJob:
     tree: SpanningTree
     wts: Weights
     checkpoint_path: str | None = None
+    # in-memory resume ``(chunks_done, acc)``: the session layer's
+    # adaptive-budget growth rounds continue a job from its previous
+    # round's cursor instead of re-reading (or needing) a checkpoint
+    # file.  Takes precedence over ``checkpoint_path`` when set.
+    resume: tuple | None = None
     # resolved by plan_jobs
     backend: str = "xla"
     fallback_reason: str = ""
@@ -342,6 +347,11 @@ def plan_jobs(jobs, *, dev: dict, chunk: int = 8192, Lmax: int = 16,
         job.base_key = jax.random.PRNGKey(job.seed)
         if int(job.wts.W_total) == 0:
             job.cursor = job.n_chunks       # nothing to sample
+        elif job.resume is not None:
+            done, acc = job.resume
+            if 0 <= int(done) <= job.n_chunks:
+                job.cursor = int(done)
+                job.acc = {kk: int(acc[kk]) for kk in _ACC_KEYS}
         else:
             _load_checkpoint(job, chunk)
         gkey = (PlanKey(job.tree, int(chunk), int(Lmax), job.backend),
@@ -358,9 +368,14 @@ def plan_jobs(jobs, *, dev: dict, chunk: int = 8192, Lmax: int = 16,
                          checkpoint_every=max(1, int(checkpoint_every)))
 
 
-def run_plan(plan: ExecutionPlan) -> list[EstimateResult]:
+def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
     """Execute a plan: one dispatch per (job-cohort, window); results in
     input job order, bit-identical to sequential ``estimate()``.
+
+    ``on_window(job, window_sums, j0, n)`` fires once per job per
+    completed window, after the job's accumulators and cursor have
+    advanced — the session layer's hook for progressive streaming and
+    batch-means RSE (``window_sums`` is THIS window's int sums dict).
 
     Within a group, jobs whose next window coincides — same ``(j0, n)``
     on the ``checkpoint_every``-aligned grid — form a cohort and dispatch
@@ -407,6 +422,9 @@ def run_plan(plan: ExecutionPlan) -> list[EstimateResult]:
                     job.sampling_s += dt
                     if job.checkpoint_path:
                         _write_checkpoint(job, plan.chunk)
+                    if on_window is not None:
+                        on_window(job, {kk: int(sums[kk][i])
+                                        for kk in _ACC_KEYS}, j0, n)
             active = [j for j in active if j.cursor < j.n_chunks]
 
     results = []

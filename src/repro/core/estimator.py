@@ -1,18 +1,20 @@
 """End-to-end TIMEST estimation (paper Alg. 6/7).
 
-``estimate()`` = choose spanning tree -> preprocess weights -> hand the
+``estimate()`` is a compatibility shim over the session API
+(repro.api): it wraps the graph in a one-shot ``Session`` and submits a
+single ``Request``.  The session plans (tree selection Alg. 7 + weight
+preprocessing Alg. 1/2, via ``core.batch.BatchPlanner``) and hands the
 job to the execution engine (core/engine.py), which samples in
 ``checkpoint_every``-aligned windows of chunks.  The chunk loop is
 restartable: chunk ``j`` always uses ``fold_in(base_key, j)``, so a
 checkpoint of ``(chunks_done, accumulators)`` resumes bit-identically
 after a failure — on any mesh shape (see the engine's determinism
-contract).  All dispatch (cross-job fusion, mesh sharding, the compiled
-window program LRU) lives in the engine; this module keeps the per-job
-planning: tree selection (Alg. 7) and weight preprocessing (Alg. 1/2).
+contract).  This module keeps ``choose_tree`` (Alg. 7, used directly by
+benchmarks/tree sweeps), the fused single-chunk micro-benchmark fn and
+the ``EstimateResult`` container.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 from ..util import ensure_x64
@@ -82,6 +84,9 @@ class EstimateResult:
     fallback_reason: str = ""      # why the requested backend was vetoed
     mesh_shape: tuple | None = None   # data-sharding mesh, None = 1 device
     fused_jobs: int = 1            # jobs sharing this job's fused group
+    # empirical batch-means relative standard error, filled by the
+    # session layer (api/session.py); None when no session measured it
+    rse: float | None = None
 
     @property
     def valid_rate(self) -> float:
@@ -145,32 +150,22 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
     ``launch.mesh.make_estimator_mesh``) shards each window's chunk range
     over the mesh's data axes; the estimate stays bit-identical to the
     unsharded run (engine determinism contract).
+
+    This is a compatibility shim over the session API (repro.api): it
+    builds a one-shot ``Session`` around the graph and submits a single
+    ``Request`` — bit-identical to the pre-session implementation
+    (pinned by tests/test_api.py goldens).  Callers issuing several
+    related queries should hold a ``Session`` instead and let its
+    preprocess cache and coalescing windows amortize the shared work.
     """
-    if dev is None:
-        dev = g.device_arrays()
-
-    t0 = time.perf_counter()
-    if tree is None:
-        tree, wts = choose_tree(g, motif, delta, n_candidates=n_candidates,
-                                dev=dev, use_c2=use_c2, use_c3=use_c3)
-        t_sel = time.perf_counter() - t0
-        t_pre = 0.0  # preprocessing is folded into selection
-    elif wts is not None:
-        t_sel = t_pre = 0.0
-    else:
-        t_sel = 0.0
-        t1 = time.perf_counter()
-        wts = preprocess(g, tree, delta, dev=dev, use_c2=use_c2,
-                         use_c3=use_c3)
-        t_pre = time.perf_counter() - t1
-
-    from .engine import EngineJob, plan_jobs, run_plan
-    job = EngineJob(index=0, motif=motif, delta=int(delta), k=int(k),
-                    seed=int(seed), tree=tree, wts=wts,
-                    checkpoint_path=checkpoint_path)
-    job.preprocess_s = t_pre
-    job.tree_select_s = t_sel
-    plan = plan_jobs([job], dev=dev, chunk=chunk, Lmax=Lmax,
-                     checkpoint_every=checkpoint_every, mesh=mesh,
-                     sampler_backend=sampler_backend)
-    return run_plan(plan)[0]
+    from ..api import EstimateConfig, Request, Session
+    cfg = EstimateConfig(chunk=chunk, Lmax=Lmax,
+                         checkpoint_every=checkpoint_every,
+                         n_candidates=n_candidates, use_c2=use_c2,
+                         use_c3=use_c3, sampler_backend=sampler_backend,
+                         seed=int(seed))
+    session = Session(g, cfg, dev=dev, mesh=mesh)
+    handle, = session.submit_many([Request(
+        motif=motif, delta=int(delta), k=int(k), seed=int(seed),
+        checkpoint_path=checkpoint_path, tree=tree, wts=wts)])
+    return handle.result()

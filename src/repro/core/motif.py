@@ -9,6 +9,7 @@ motif can be counted under different windows (as in the paper's evaluation).
 from __future__ import annotations
 
 import itertools
+import re
 from dataclasses import dataclass, field
 
 
@@ -149,8 +150,53 @@ register(_m("edge2", 2, (0, 1), (0, 1)))                      # temporal multi-e
 register(_m("ping-pong", 2, (0, 1), (1, 0)))
 
 
+# ---------------------------------------------------------------------------
+# Inline edge-list DSL: "0-1,1-2,2-0" = directed edges u->v in pi order.
+# Lets CLIs / serve requests express custom motifs without touching the
+# catalog above.  Vertex ids must be 0..n-1 (n inferred as max id + 1);
+# all TemporalMotif validation (connectivity, no self-loops, no isolated
+# vertices) applies.
+# ---------------------------------------------------------------------------
+_SPEC_RE = re.compile(r"^\s*\d+\s*-\s*\d+\s*(,\s*\d+\s*-\s*\d+\s*)*$")
+
+
+def is_motif_spec(name: str) -> bool:
+    """True when ``name`` is an inline edge-list spec, not a catalog name
+    (catalog names like "M5-3" or "scatter-gather" never match: both
+    endpoints of every pair must be bare integers)."""
+    return bool(_SPEC_RE.match(name))
+
+
+def parse_motif_spec(spec: str) -> TemporalMotif:
+    """Build a ``TemporalMotif`` from an inline "u-v,u-v,..." spec.
+
+    The motif's ``name`` is the canonical re-serialization
+    (``motif_spec`` of the result round-trips to it).
+    """
+    if not is_motif_spec(spec):
+        raise ValueError(f"not a motif edge-list spec: {spec!r} "
+                         "(want e.g. '0-1,1-2,2-0')")
+    edges = []
+    for part in spec.split(","):
+        u, _, v = part.partition("-")
+        edges.append((int(u), int(v)))
+    n = 1 + max(max(u, v) for u, v in edges)
+    return TemporalMotif(name=",".join(f"{u}-{v}" for u, v in edges),
+                         num_vertices=n, edges=tuple(edges))
+
+
+def motif_spec(motif: TemporalMotif) -> str:
+    """Serialize any motif to the inline DSL (``parse_motif_spec``
+    round-trips: same vertices, same edges, same pi order)."""
+    return ",".join(f"{u}-{v}" for u, v in motif.edges)
+
+
 def get_motif(name: str) -> TemporalMotif:
+    """Catalog lookup, or inline DSL parse when ``name`` looks like one
+    ("0-1,1-2,2-0"); catalog names always win (none parse as specs)."""
     try:
         return MOTIFS[name]
     except KeyError as e:
+        if is_motif_spec(name):
+            return parse_motif_spec(name)
         raise KeyError(f"unknown motif {name!r}; have {sorted(MOTIFS)}") from e

@@ -21,6 +21,21 @@ devices first, so a laptop can rehearse the 8-way layout:
         --graph powerlaw:n=2000,m=40000 --motif M5-3 --delta 5000 \
         --k 1048576 --devices 8 --mesh auto
 
+Serving mode — ``--serve`` keeps ONE resident session (graph upload,
+preprocess cache, compiled window programs) alive and answers
+line-delimited-JSON requests on stdin with JSON responses on stdout
+(wire protocol: ``repro.api.serve``).  Requests arriving within the
+coalescing window fuse like ``estimate_many`` jobs; ``target_rse``
+requests grow their budget adaptively:
+
+    printf '%s\\n' '{"id":1,"motif":"M5-3","delta":5000,"k":65536}' \\
+                   '{"id":2,"motif":"0-1,1-2,2-0","delta":5000,"k":65536}' \\
+      | PYTHONPATH=src python -m repro.launch.estimate \\
+          --graph powerlaw:n=2000,m=40000 --serve
+
+``--motif`` (and serve requests) accept inline edge-list specs like
+``0-1,1-2,2-0`` (directed edges in pi order) besides catalog names.
+
 Graphs: ``powerlaw:...`` / ``er:...`` / ``fintxn:...`` synthetic specs or
 a path to an edge-list file.  The chunk loop checkpoints and resumes
 (fault tolerance — checkpoints are mesh-shape-free, so a 1-device
@@ -91,6 +106,15 @@ def main() -> None:
                          "outside the f32-exact/VMEM envelope)")
     ap.add_argument("--exact", action="store_true",
                     help="also run the exact oracle (slow!)")
+    ap.add_argument("--serve", action="store_true",
+                    help="persistent serving: answer line-delimited-JSON "
+                         "requests on stdin against one resident session "
+                         "(see repro.api.serve for the protocol)")
+    ap.add_argument("--coalesce-window", type=float, default=0.05,
+                    help="serve: seconds a submit window stays open so "
+                         "concurrent requests can fuse")
+    ap.add_argument("--coalesce-max", type=int, default=64,
+                    help="serve: max requests per submit window")
     args = ap.parse_args()
     if args.devices:
         from .mesh import force_host_device_count
@@ -101,11 +125,32 @@ def main() -> None:
         os.environ["REPRO_SAMPLER_BACKEND"] = args.sampler_backend
 
     from ..core.estimator import estimate
-    from ..core.motif import get_motif
+    from ..core.motif import get_motif, is_motif_spec
 
     g = parse_graph(args.graph)
     mesh = build_mesh(args.mesh)
-    motifs = args.motif.split(",")
+
+    if args.serve:
+        import sys
+
+        from ..api import EstimateConfig, Session, serve_loop
+        cfg = EstimateConfig(chunk=args.chunk, seed=args.seed,
+                             coalesce_window_s=args.coalesce_window,
+                             coalesce_max_requests=args.coalesce_max)
+        session = Session(g, cfg, mesh=mesh)
+        # stdout is the response stream — logs go to stderr
+        print(f"serving graph n={g.n} m={g.m} span={g.time_span}  "
+              f"mesh={mesh.shape if mesh is not None else None}  "
+              f"window={args.coalesce_window}s max={args.coalesce_max}",
+              file=sys.stderr, flush=True)
+        served = serve_loop(session)
+        print(f"served {served} requests", file=sys.stderr)
+        return
+
+    # an inline DSL motif contains commas itself — treat a --motif that
+    # parses as ONE spec as a single motif, not a comma list
+    motifs = ([args.motif] if is_motif_spec(args.motif)
+              else args.motif.split(","))
     deltas = [int(d) for d in str(args.delta).split(",")]
     print(f"graph: n={g.n} m={g.m} span={g.time_span}  "
           f"motifs={motifs} deltas={deltas}  k={args.k}  "
