@@ -1,0 +1,99 @@
+"""Live anti-money-laundering screening over a transaction STREAM.
+
+    PYTHONPATH=src python examples/streaming_fraud.py
+    PYTHONPATH=src python examples/streaming_fraud.py --epochs 8 --k 16384
+
+The offline fraud example (examples/fraud_detection.py) screens a frozen
+transaction graph; real AML monitoring watches transfers as they clear.
+This example replays a synthetic transaction log (the ``fintxn``
+generator: power-law background + planted laundering rings and
+scatter-gather smurfing bursts) through ``repro.stream``:
+
+* edges arrive in time order, one ingest batch per epoch;
+* a sliding ``--horizon`` keeps only recent transfers — old epochs age
+  out at compaction, so the resident graph stays bounded;
+* standing queries on the fraud motifs (temporal cycle M5-3 and the
+  scatter-gather pattern) re-estimate on every epoch advance.
+
+Each per-epoch count is bit-identical to a cold ``estimate()`` on that
+epoch's snapshot (the stream determinism contract); what streaming adds
+is the *warm path* — power-of-two padded snapshots let the engine's
+compiled window programs carry across epochs, so steady-state advances
+cost milliseconds-to-seconds instead of a full retrace.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+MOTIFS = ("M5-3", "scatter-gather")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--k", type=int, default=1 << 13)
+    ap.add_argument("--delta", type=int, default=2_000)
+    ap.add_argument("--horizon", type=int, default=80_000)
+    ap.add_argument("--accounts", type=int, default=300)
+    ap.add_argument("--m", type=int, default=9_000)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.api import EstimateConfig
+    from repro.graphs import fintxn_temporal_graph
+    from repro.stream import StandingQuery, StreamingSession
+
+    # the "live" transaction log: a fintxn graph replayed in time order
+    log = fintxn_temporal_graph(n_accounts=args.accounts, m=args.m,
+                                time_span=240_000, n_rings=25, ring_size=5,
+                                n_smurf=20, seed=0)
+    order = np.argsort(log.t, kind="stable")
+    src = log.src[order].astype(np.int64)
+    dst = log.dst[order].astype(np.int64)
+    t = log.t[order].astype(np.int64)
+    batch = len(src) // args.epochs
+
+    print(f"transaction log: {len(src)} transfers, {log.n} accounts, "
+          f"span {int(t[-1])}  |  horizon={args.horizon} "
+          f"delta={args.delta} k={args.k}")
+
+    # checkpoint_every=2: several checkpoint windows per budget, so the
+    # batch-means RSE column is measurable (it needs >= 2 windows)
+    with StreamingSession(config=EstimateConfig(chunk=1024,
+                                                checkpoint_every=2),
+                          horizon=args.horizon) as ss:
+        qids = [ss.subscribe(StandingQuery(m, args.delta, args.k, seed=0))
+                for m in MOTIFS]
+        hdr = "".join(f"{m:>16s}{'rse':>8s}" for m in MOTIFS)
+        print(f"\n{'epoch':>5s} {'live m':>7s} {'evict':>6s} "
+              f"{'t window':>17s}{hdr} {'advance':>9s}")
+        for e in range(args.epochs):
+            lo = e * batch
+            hi = len(src) if e == args.epochs - 1 else lo + batch
+            ss.ingest(src[lo:hi], dst[lo:hi], t[lo:hi])
+            t0 = time.perf_counter()
+            er = ss.advance()
+            dt = time.perf_counter() - t0
+            ep = er.epoch
+            cols = ""
+            for qid in qids:
+                res = er.results[qid]
+                rse = res.rse
+                cols += (f"{res.estimate:>16.4g}"
+                         f"{'' if rse is None else f'{rse:>8.2f}'}")
+            print(f"{ep.index:>5d} {ep.m_real:>7d} {ep.evicted:>6d} "
+                  f"[{ep.t_lo:>7d},{ep.t_hi:>7d}]{cols} {dt:>8.2f}s")
+
+    print("\nInterpretation: counts track the sliding window — ring/"
+          "smurfing structures inflate the cycle and scatter-gather "
+          "counts while they are inside the horizon and fall away as "
+          "they age out.  Once snapshot buckets stabilize, advances are "
+          "warm (compiled-program reuse): compare the first epochs' "
+          "advance time against the last ones'.")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,64 @@ assert ids == {1, 2, 3}, ids
 print("serve smoke OK")
 '
 
+# streaming front-end: drive a real --serve --stream process through the
+# live verbs (subscribe -> ingest -> advance x2 with eviction) and assert
+# the standing-query epoch responses + summaries come back well-formed
+python - <<'PYEOF' > /tmp/ci_stream_input.ndjson
+import json
+lines = [
+    {"cmd": "subscribe", "motif": "0-1,1-2,2-0", "delta": 400, "k": 512},
+    {"cmd": "ingest",
+     "edges": [[i % 11, (i + 1) % 11, 120 * i] for i in range(150)]},
+    {"cmd": "advance"},
+    {"cmd": "ingest",
+     "edges": [[(i + 3) % 11, i % 11, 18000 + 120 * i] for i in range(150)]},
+    {"cmd": "advance"},
+    {"cmd": "quit"},
+]
+print("\n".join(json.dumps(o) for o in lines))
+PYEOF
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.estimate --serve --stream --horizon 12000 \
+      --chunk 256 < /tmp/ci_stream_input.ndjson \
+  | PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -c '
+import json, sys
+rs = [json.loads(ln) for ln in sys.stdin if ln.strip()]
+by_cmd = {}
+for r in rs:
+    by_cmd.setdefault(r.get("cmd", "sub" if "sub" in r else "?"), []).append(r)
+assert by_cmd["subscribe"][0]["ok"] and by_cmd["subscribe"][0]["sub"] == 0
+assert all(r["ok"] and r["ingested"] == 150 for r in by_cmd["ingest"])
+advances = by_cmd["advance"]
+assert len(advances) == 2 and [a["epoch"] for a in advances] == [0, 1]
+assert advances[1]["evicted"] > 0, "horizon never evicted"
+subs = by_cmd["sub"]
+assert len(subs) == 2 and all(r["ok"] and "estimate" in r for r in subs)
+assert [r["epoch"] for r in subs] == [0, 1]
+assert by_cmd["quit"][0]["served"] == 2
+print("stream serve smoke OK")
+'
+
+# stream replay: the CLI replays a recorded (gzipped) edge list through
+# the store, advancing epochs with standing queries
+python - <<'PYEOF'
+import gzip, numpy as np
+rng = np.random.default_rng(0)
+m, n = 1200, 40
+src = rng.integers(0, n, m); dst = (src + rng.integers(1, n, m)) % n
+t = np.sort(rng.integers(0, 30_000, m))
+with gzip.open("/tmp/ci_stream_replay.txt.gz", "wt") as f:
+    np.savetxt(f, np.stack([src, dst, t], 1), fmt="%d")
+PYEOF
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.estimate --stream-replay /tmp/ci_stream_replay.txt.gz \
+      --horizon 15000 --replay-batch 400 --motif 0-1,1-2 --delta 500 \
+      --k 1024 --chunk 256 \
+  | tee /tmp/ci_stream_replay.out
+grep -q "epoch 2:" /tmp/ci_stream_replay.out || {
+  echo "stream replay smoke FAILED"; exit 1; }
+echo "stream replay smoke OK"
+
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite batch --fast
@@ -65,4 +123,6 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python -m benchmarks.run --suite engine --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite serve --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite stream --fast
 fi

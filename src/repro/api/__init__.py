@@ -87,6 +87,18 @@ Serving
 in a line-delimited-JSON stdin/stdout loop (see api/serve.py for the
 wire protocol) so one persistent process serves many queries against a
 resident graph.
+
+Live graphs
+-----------
+A ``Session`` holds one immutable snapshot.  For edge STREAMS — ingest
+continuously, keep standing motif estimates fresh over a sliding window
+— use ``repro.stream.StreamingSession``, which swaps a fresh session
+onto each epoch snapshot while compiled window programs and preprocess
+traces carry over (power-of-two padded snapshots keep array shapes
+stable).  The serve loop grows matching ``ingest``/``advance``/
+``subscribe`` verbs (``--serve --stream``); each per-epoch standing
+count is bit-identical to a cold ``estimate()`` on that epoch's
+snapshot.
 """
 from .config import EstimateConfig
 from .serve import serve_loop

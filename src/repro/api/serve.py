@@ -21,6 +21,25 @@ request line must not name server-side files to overwrite).
 Control lines: ``{"cmd": "stats"}`` (session counters), ``{"cmd":
 "quit"}`` (drain + exit; EOF does the same).
 
+Streaming verbs (``--serve --stream``; ``serve_loop(..., stream=...)``)::
+
+    {"cmd": "subscribe", "motif": "M5-3", "delta": 4000, "k": 16384}
+    {"cmd": "ingest", "edges": [[0, 1, 17], [1, 2, 403], ...]}
+    {"cmd": "advance"}
+    {"cmd": "unsubscribe", "sub": 0}
+
+``subscribe`` registers a standing query (same fields as a request, no
+``id``) and answers ``{"ok": true, "cmd": "subscribe", "sub": N}``.
+``ingest`` appends an edge batch to the stream store (O(batch), nothing
+recomputes).  ``advance`` materializes the next epoch snapshot and
+re-estimates every standing query against it — one response line per
+subscription (``{"sub": N, "epoch": e, "ok": true, "estimate": ...}``,
+in subscription order) followed by an epoch summary line.  Per the
+stream determinism contract, each standing estimate is bit-identical to
+a cold one-shot ``estimate()`` on that epoch's snapshot.  One-shot
+request lines also work in stream mode (served against the current
+epoch; an error until the first ``advance``).
+
 Responses (one line each, in request order within a window)::
 
     {"id": 1, "ok": true, "estimate": 4636.58, "W": 412857, "k": 65536,
@@ -134,25 +153,70 @@ def _parse_request(obj: dict) -> Request:
         k_max=None if obj.get("k_max") is None else int(obj["k_max"]))
 
 
-def _stats(session: Session) -> dict:
-    s = session.stats
-    return dict(ok=True, cmd="stats", submitted=s.submitted,
-                completed=s.completed, drains=s.drains,
-                dispatches=s.dispatches, adaptive_rounds=s.adaptive_rounds,
-                preprocess_calls=session.planner.preprocess_calls,
-                preprocess_hits=session.planner.preprocess_hits)
+def _stats(session: Session | None, stream=None) -> dict:
+    d = dict(ok=True, cmd="stats")
+    if session is not None:
+        s = session.stats
+        d.update(submitted=s.submitted, completed=s.completed,
+                 drains=s.drains, dispatches=s.dispatches,
+                 adaptive_rounds=s.adaptive_rounds,
+                 preprocess_calls=session.planner.preprocess_calls,
+                 preprocess_hits=session.planner.preprocess_hits)
+    if stream is not None:
+        st, ss = stream.store.stats, stream.stats
+        d.update(epochs=ss.epochs, subscriptions=len(stream.queries),
+                 queries_run=ss.queries_run, ingested=st.ingested,
+                 buffered=stream.store.buffered, evicted=st.evicted,
+                 dropped=st.dropped, compactions=st.compactions)
+    return d
 
 
-def serve_loop(session: Session, infile: IO = None, outfile: IO = None
-               ) -> int:
+_SUBSCRIBE_FIELDS = frozenset(
+    ("cmd", "motif", "delta", "k", "seed", "target_rse", "k_max", "name"))
+
+
+def _parse_ingest(obj: dict):
+    import numpy as np
+    edges = obj.get("edges")
+    if not isinstance(edges, list) or not edges:
+        raise ValueError('ingest needs "edges": [[src, dst, t], ...]')
+    a = np.asarray(edges, dtype=np.int64)
+    if a.ndim != 2 or a.shape[1] != 3:
+        raise ValueError(f"edges must be [N, 3] int triples, got "
+                         f"shape {a.shape}")
+    return a[:, 0], a[:, 1], a[:, 2]
+
+
+def _sub_response(qid: int, query, epoch_idx: int, res) -> dict:
+    rse = res.rse
+    return dict(sub=qid, epoch=epoch_idx, ok=True, name=query.label,
+                estimate=res.estimate, W=res.W, k=res.k, valid=res.valid,
+                rse=None if rse is None or math.isinf(rse) else rse,
+                motif=res.motif, delta=res.delta,
+                sampler_backend=res.sampler_backend,
+                fused_jobs=res.fused_jobs)
+
+
+def serve_loop(session: Session | None, infile: IO = None,
+               outfile: IO = None, stream=None) -> int:
     """Run the NDJSON request/response loop until EOF or ``quit``.
 
-    Returns the number of estimation requests answered.
+    ``stream`` (a ``repro.stream.StreamingSession``) enables the
+    streaming verbs; the resident estimation session is then the stream's
+    current-epoch session (swapped on every ``advance``) and ``session``
+    must be None.  Returns the number of estimation requests answered
+    (standing-query epoch responses included).
     """
+    if (session is None) == (stream is None):
+        raise ValueError("serve_loop needs exactly one of session/stream")
+    cfg = session.config if stream is None else stream.config
     src = _LineSource(sys.stdin if infile is None else infile)
     out = sys.stdout if outfile is None else outfile
     pending: list[tuple] = []          # (id, Handle)
     served = 0
+
+    def cur_session() -> Session | None:
+        return session if stream is None else stream.session
 
     def emit(obj: dict) -> None:
         out.write(json.dumps(obj) + "\n")
@@ -163,8 +227,10 @@ def serve_loop(session: Session, infile: IO = None, outfile: IO = None
 
     def drain() -> None:
         nonlocal served
+        s = cur_session()
         try:
-            session.flush()
+            if s is not None:
+                s.flush()
         except Exception:        # noqa: BLE001 — the server stays up; each
             pass                 # failed handle answers ok:false below
         for rid, h in pending:
@@ -175,16 +241,38 @@ def serve_loop(session: Session, infile: IO = None, outfile: IO = None
             served += 1
         pending.clear()
 
+    def do_advance() -> None:
+        # drain first: pending handles belong to the OLD epoch's session
+        nonlocal served
+        drain()
+        try:
+            er = stream.advance()
+        except Exception as e:           # noqa: BLE001 — e.g. empty stream
+            emit(dict(ok=False, cmd="advance",
+                      error=f"{type(e).__name__}: {e}"))
+            return
+        for qid in sorted(er.results):
+            emit(_sub_response(qid, stream.queries[qid], er.epoch.index,
+                               er.results[qid]))
+            served += 1
+        ep = er.epoch
+        emit(dict(ok=True, cmd="advance", epoch=ep.index, m=ep.m_real,
+                  n=ep.n_real, t_lo=ep.t_lo, t_hi=ep.t_hi,
+                  evicted=ep.evicted, buckets=list(ep.buckets),
+                  queries=len(er.results),
+                  advance_s=round(er.advance_s, 6)))
+
     quit_seen = False
     while not quit_seen:
         # block for the window's first request; afterwards poll with the
         # window's remaining lifetime so a quiet client closes it
-        age = session.window_age()
+        s = cur_session()
+        age = s.window_age() if s is not None else None
         if pending and age is None:     # session auto-drained (count-closed)
             drain()
             continue
         timeout = (None if not pending
-                   else max(0.0, session.config.coalesce_window_s - age))
+                   else max(0.0, cfg.coalesce_window_s - age))
         line = src.readline(timeout)
         if line is None or (line == "" and pending):   # window expired/EOF
             drain()
@@ -208,7 +296,53 @@ def serve_loop(session: Session, infile: IO = None, outfile: IO = None
             quit_seen = True
         elif cmd == "stats":
             drain()                     # deterministic ordering
-            emit(_stats(session))
+            emit(_stats(cur_session(), stream))
+        elif cmd in ("ingest", "advance", "subscribe", "unsubscribe"):
+            if stream is None:
+                emit(dict(ok=False, error=f"cmd {cmd!r} needs stream mode "
+                                          "(--serve --stream)"))
+            elif cmd == "ingest":
+                try:
+                    esrc, edst, et = _parse_ingest(obj)
+                    n_in = stream.ingest(esrc, edst, et)
+                    emit(dict(ok=True, cmd="ingest", ingested=n_in,
+                              dropped=len(esrc) - n_in,
+                              buffered=stream.store.buffered))
+                except Exception as e:   # noqa: BLE001
+                    emit(dict(ok=False, cmd="ingest",
+                              error=f"{type(e).__name__}: {e}"))
+            elif cmd == "advance":
+                do_advance()
+            elif cmd == "subscribe":
+                try:
+                    unknown = set(obj) - _SUBSCRIBE_FIELDS
+                    if unknown:
+                        raise ValueError(
+                            f"unknown subscribe field(s) {sorted(unknown)}; "
+                            f"accepted: {sorted(_SUBSCRIBE_FIELDS)}")
+                    from ..stream import StandingQuery
+                    q = StandingQuery(
+                        motif=str(obj["motif"]), delta=int(obj["delta"]),
+                        k=int(obj["k"]), seed=int(obj.get("seed") or 0),
+                        target_rse=(None if obj.get("target_rse") is None
+                                    else float(obj["target_rse"])),
+                        k_max=(None if obj.get("k_max") is None
+                               else int(obj["k_max"])),
+                        name=(None if obj.get("name") is None
+                              else str(obj["name"])))
+                    emit(dict(ok=True, cmd="subscribe",
+                              sub=stream.subscribe(q), name=q.label))
+                except Exception as e:   # noqa: BLE001
+                    emit(dict(ok=False, cmd="subscribe",
+                              error=f"{type(e).__name__}: {e}"))
+            else:
+                try:
+                    q = stream.unsubscribe(int(obj["sub"]))
+                    emit(dict(ok=True, cmd="unsubscribe",
+                              sub=int(obj["sub"]), name=q.label))
+                except Exception as e:   # noqa: BLE001
+                    emit(dict(ok=False, cmd="unsubscribe",
+                              error=f"{type(e).__name__}: {e}"))
         elif cmd is not None:
             emit(dict(ok=False, error=f"unknown cmd {cmd!r}"))
         else:
@@ -220,8 +354,12 @@ def serve_loop(session: Session, infile: IO = None, outfile: IO = None
                 if isinstance(req.motif, str):
                     from ..core.motif import get_motif
                     get_motif(req.motif)
-                pending.append((rid, session.submit(req)))
-                if session.window_age() is None:    # count-closed mid-add
+                s = cur_session()
+                if s is None:
+                    raise RuntimeError("no epoch materialized yet — send "
+                                       "ingest + advance first")
+                pending.append((rid, s.submit(req)))
+                if s.window_age() is None:          # count-closed mid-add
                     drain()
             except Exception as e:       # noqa: BLE001
                 emit(dict(id=rid, ok=False,

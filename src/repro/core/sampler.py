@@ -134,7 +134,10 @@ def _make_sample_fn_xla(tree: SpanningTree, K: int):
         # -- 1. window ---------------------------------------------------
         W = jnp.maximum(wts.W_total, 1)
         x = jax.random.randint(keys[0], (K,), 0, W, dtype=jnp.int64)
-        itq = max(8, int(wts.q).bit_length() + 1)
+        # trip count from the STATIC window-array length (>= the traced
+        # real q; extra iterations are converged no-ops) — wts.q itself
+        # is traced so epoch snapshots never retrace on window count
+        itq = max(8, wts.q_pad.bit_length() + 1)
         win = seg_upper_bound(wts.ps_win, jnp.zeros((K,), jnp.int64),
                               jnp.full((K,), wts.q, jnp.int64), x,
                               iters=itq) - 1

@@ -33,7 +33,7 @@ from typing import Any
 import numpy as np
 
 from ..util import ensure_x64
-from .graph import TemporalGraph
+from .graph import TemporalGraph, pad_bucket
 from .spanning_tree import AFTER, BEFORE, IN, OUT, SpanningTree
 
 ensure_x64()
@@ -80,7 +80,7 @@ class Weights:
     tree: SpanningTree
     delta: int
     wd: int           # window stride (== delta normally; C3-off: >= span)
-    q: int
+    q: Any            # int64 scalar, TRACED (see note below)
     use_c2: bool
     w_own: Any        # [S, m] int64
     w_prev: Any       # [S, m] int64
@@ -98,13 +98,26 @@ class Weights:
     def W_win(self):
         return self.ps_win[1:] - self.ps_win[:-1]
 
+    @property
+    def q_pad(self) -> int:
+        """Static window-array length (>= q; == q on unpadded graphs)."""
+        return int(self.ps_win.shape[0]) - 1
 
+
+# ``q`` is a DATA field (a traced int64 scalar), not metadata: epoch
+# snapshots of a streaming graph (repro.stream) jitter the real window
+# count per advance, and a static q would retrace every compiled window
+# program each epoch.  The window arrays are shape-stable instead
+# (padded to ``q_pad`` with zero-weight windows when the graph asks for
+# it), bisection trip counts derive from ``q_pad``, and the real ``q``
+# flows through the programs as a traced cutoff (window draw upper
+# bound, N_phi cap in validate).
 jax.tree_util.register_dataclass(
     Weights,
-    data_fields=["w_own", "w_prev", "ps_acc_own", "ps_acc_prev",
+    data_fields=["q", "w_own", "w_prev", "ps_acc_own", "ps_acc_prev",
                  "ps_pair_own", "ps_pair_prev", "W_total", "ps_win",
                  "win_lo", "win_mid", "win_hi"],
-    meta_fields=["tree", "delta", "wd", "q", "use_c2"])
+    meta_fields=["tree", "delta", "wd", "use_c2"])
 
 
 def access_alpha(tree: SpanningTree) -> list[int]:
@@ -225,6 +238,14 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
         fl = t // wd
         own_ok = fl <= q - 1
         prev_ok = fl >= 1
+        if "m_real" in dev:
+            # padded snapshot (graph.pad_snapshot): entries at positions
+            # >= m_real are pad edges — zero their weights so every
+            # prefix sum is flat across the pad suffix and the samplers
+            # can never select them (m_real == m on unpadded graphs)
+            real = jnp.arange(m, dtype=jnp.int64) < dev["m_real"]
+            own_ok = own_ok & real
+            prev_ok = prev_ok & real
 
         w_own_l: list = [None] * S
         w_prev_l: list = [None] * S
@@ -300,14 +321,16 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
     core_j = jax.jit(core)
     root = tree.root
 
-    def fn(dev, delta, wd, q):
+    def fn(dev, delta, wd, q, q_pad=None):
         out = dict(core_j(dev, delta, wd, q))
-        # the q-SHAPED part is a tiny tail over the root prefixes; keeping
-        # it out of the core means one heavy compile per tree serves
-        # every delta (q is a traced scalar above, a static shape here)
-        out.update(_window_totals_fn(int(q))(
+        # the q_pad-SHAPED part is a tiny tail over the root prefixes;
+        # keeping it out of the core means one heavy compile per tree
+        # serves every delta (q is a traced scalar above AND below —
+        # only the bucketed array length q_pad is a static shape, so
+        # epoch snapshots sharing a window bucket never recompile)
+        out.update(_window_totals_fn(int(q if q_pad is None else q_pad))(
             dev["t"], out["ps_acc_own"][root], out["ps_acc_prev"][root],
-            wd))
+            wd, q))
         out["W_total"] = out["ps_win"][-1]
         return out
 
@@ -315,24 +338,29 @@ def make_preprocess_fn(tree: SpanningTree, use_c2: bool = True,
 
 
 @lru_cache(maxsize=64)
-def _window_totals_fn(q: int):
+def _window_totals_fn(q_pad: int):
     """Per-window totals (Claim 4.10 restricted to window i), jitted per
-    static ``q``; memoized in a small LRU (one entry per distinct q).
+    static array length ``q_pad``; memoized in a small LRU.
 
     Tree-independent (inputs are just the root's global-order prefixes),
-    so one compile serves every tree and candidate at a given ``q`` —
-    and it always runs on the exact int64 prefixes (on the pallas path
+    so one compile serves every tree and candidate at a given ``q_pad``
+    — and it always runs on the exact int64 prefixes (on the pallas path
     the core has already cast back), so ``ps_win``/``W_total`` never
     round even when a window total exceeds an individual prefix top.
+    The real window count ``q`` is a traced cutoff: slots ``>= q`` get
+    ``W_i = 0``, so ``ps_win`` is flat across them and the window draw
+    can never land there (``q_pad == q`` on unpadded graphs).
     """
-    def f(t, ps_root_own, ps_root_prev, wd):
+    def f(t, ps_root_own, ps_root_prev, wd, q):
         wd = jnp.asarray(wd, jnp.int64)
-        iarr = jnp.arange(q, dtype=jnp.int64)
+        q = jnp.asarray(q, jnp.int64)
+        iarr = jnp.arange(q_pad, dtype=jnp.int64)
         win_lo = jnp.searchsorted(t, iarr * wd, side="left")
         win_mid = jnp.searchsorted(t, (iarr + 1) * wd, side="left")
         win_hi = jnp.searchsorted(t, (iarr + 2) * wd, side="left")
         W_i = ((ps_root_own[win_mid] - ps_root_own[win_lo])
                + (ps_root_prev[win_hi] - ps_root_prev[win_mid]))
+        W_i = jnp.where(iarr < q, W_i, 0)
         return dict(ps_win=_excl(W_i), win_lo=win_lo,
                     win_mid=win_mid, win_hi=win_hi)
 
@@ -371,15 +399,18 @@ def preprocess(g: TemporalGraph, tree: SpanningTree, delta: int,
         dev = g.device_arrays()
     wd = int(delta) if use_c3 else int(g.time_span) + 1
     q = num_windows(g.time_span, wd)
+    # padded snapshots bucket the window arrays too, so the whole Weights
+    # pytree keeps stable shapes while the sliding window jitters q
+    q_pad = pad_bucket(q) if getattr(g, "pad_windows", False) else q
     backend = depsum_backend(backend)
     out = dict(cached_preprocess_fn(tree, use_c2=use_c2, backend=backend)(
-        dev, delta, wd, q))
+        dev, delta, wd, q, q_pad))
     if not bool(out.pop("exact")):
         out = dict(cached_preprocess_fn(tree, use_c2=use_c2, backend="xla")(
-            dev, delta, wd, q))
+            dev, delta, wd, q, q_pad))
         out.pop("exact")
-    return Weights(tree=tree, delta=int(delta), wd=wd, q=q, use_c2=use_c2,
-                   **out)
+    return Weights(tree=tree, delta=int(delta), wd=wd,
+                   q=jnp.asarray(q, jnp.int64), use_c2=use_c2, **out)
 
 
 # ---------------------------------------------------------------------------

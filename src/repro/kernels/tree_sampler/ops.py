@@ -122,7 +122,7 @@ def pallas_sampler_eligible(dev, wts, *, vmem_budget_bytes: int | None = None
     m = int(dev["t"].shape[0])
     n = int(dev["out_ptr"].shape[0]) - 1
     P = int(dev["pair_ptr"].shape[0]) - 1
-    need = kernel_vmem_bytes(m, n, P, int(wts.q), wts.tree.num_edges)
+    need = kernel_vmem_bytes(m, n, P, wts.q_pad, wts.tree.num_edges)
     budget = (vmem_budget_bytes if vmem_budget_bytes is not None
               else int(os.environ.get("REPRO_SAMPLER_VMEM_MB", 192)) << 20)
     if need > budget:
@@ -152,7 +152,9 @@ def make_pallas_sample_fn(tree: SpanningTree, K: int, *, bk: int | None = None,
     def fn(dev, wts, key):
         m = dev["t"].shape[0]
         it = bisect_iters(m)
-        itq = max(8, int(wts.q).bit_length() + 1)
+        # static shape-derived trip count (wts.q is traced); == the old
+        # q-derived count on unpadded graphs
+        itq = max(8, wts.q_pad.bit_length() + 1)
         x, uhi, ulo = prepare_draws(tree, wts, key, K)
         arrays = _device_prep(dev, wts)
         edges32, win32 = tree_sampler_call(

@@ -26,7 +26,7 @@ def tree_sampler_ref(tree: SpanningTree, dev, wts, x, uhi, ulo):
     r = tree.root
     K = x.shape[0]
 
-    itq = max(8, int(wts.q).bit_length() + 1)
+    itq = max(8, wts.q_pad.bit_length() + 1)
     win = seg_upper_bound(wts.ps_win, jnp.zeros((K,), jnp.int64),
                           jnp.full((K,), wts.q, jnp.int64), x,
                           iters=itq) - 1

@@ -36,6 +36,22 @@ requests grow their budget adaptively:
 ``--motif`` (and serve requests) accept inline edge-list specs like
 ``0-1,1-2,2-0`` (directed edges in pi order) besides catalog names.
 
+Streaming mode — ``--serve --stream`` starts with an EMPTY live graph
+(``repro.stream``): clients ingest edge batches, advance epoch
+snapshots, and register standing queries over NDJSON (``{"cmd":
+"ingest" | "advance" | "subscribe"}``; protocol in ``repro.api.serve``).
+``--horizon`` sets the sliding retention window.  Offline,
+``--stream-replay FILE`` replays a recorded edge list (text/.gz/.npz)
+through the same machinery: each ``--replay-batch`` edges ingest as one
+batch, every ``--advance-every`` batches an epoch advances and the
+``--motif`` x ``--delta`` standing queries re-estimate — per the stream
+determinism contract, each printed count is bit-identical to a cold
+``estimate()`` on that epoch's snapshot:
+
+    PYTHONPATH=src python -m repro.launch.estimate \\
+        --stream-replay data/stream.txt.gz --horizon 100000 \\
+        --motif M5-3 --delta 5000 --k 65536 --replay-batch 20000
+
 Graphs: ``powerlaw:...`` / ``er:...`` / ``fintxn:...`` synthetic specs or
 a path to an edge-list file.  The chunk loop checkpoints and resumes
 (fault tolerance — checkpoints are mesh-shape-free, so a 1-device
@@ -115,7 +131,30 @@ def main() -> None:
                          "concurrent requests can fuse")
     ap.add_argument("--coalesce-max", type=int, default=64,
                     help="serve: max requests per submit window")
+    ap.add_argument("--stream", action="store_true",
+                    help="with --serve: start on an EMPTY live graph and "
+                         "accept ingest/advance/subscribe verbs "
+                         "(repro.stream; --graph is ignored)")
+    ap.add_argument("--stream-replay", default=None, metavar="FILE",
+                    help="replay an edge-list file (text/.gz/.npz) as a "
+                         "live stream: ingest in batches, advance epochs, "
+                         "re-estimate the --motif x --delta standing "
+                         "queries per epoch")
+    ap.add_argument("--horizon", type=int, default=None,
+                    help="stream: sliding retention window in time units "
+                         "(edges older than newest-t minus horizon are "
+                         "evicted at compaction; default: keep all)")
+    ap.add_argument("--replay-batch", type=int, default=65536,
+                    help="stream replay: edges per ingest batch")
+    ap.add_argument("--advance-every", type=int, default=1,
+                    help="stream replay: ingest batches per epoch advance")
     args = ap.parse_args()
+    if args.stream and not args.serve:
+        ap.error("--stream requires --serve (for offline replay use "
+                 "--stream-replay FILE)")
+    if args.horizon is not None and not (args.stream or args.stream_replay):
+        ap.error("--horizon only applies to stream modes (--serve --stream "
+                 "or --stream-replay)")
     if args.devices:
         from .mesh import force_host_device_count
         force_host_device_count(args.devices)
@@ -127,8 +166,56 @@ def main() -> None:
     from ..core.estimator import estimate
     from ..core.motif import get_motif, is_motif_spec
 
-    g = parse_graph(args.graph)
     mesh = build_mesh(args.mesh)
+
+    if args.serve and args.stream:
+        import sys
+
+        from ..api import EstimateConfig, serve_loop
+        from ..stream import StreamingSession
+        cfg = EstimateConfig(chunk=args.chunk, seed=args.seed,
+                             coalesce_window_s=args.coalesce_window,
+                             coalesce_max_requests=args.coalesce_max)
+        with StreamingSession(config=cfg, horizon=args.horizon,
+                              mesh=mesh) as ss:
+            print(f"serving LIVE stream  horizon={args.horizon}  "
+                  f"mesh={mesh.shape if mesh is not None else None}",
+                  file=sys.stderr, flush=True)
+            served = serve_loop(None, stream=ss)
+        print(f"served {served} responses", file=sys.stderr)
+        return
+
+    if args.stream_replay:
+        from ..api import EstimateConfig
+        from ..stream import StandingQuery, StreamingSession, replay_epochs
+        motifs = ([args.motif] if is_motif_spec(args.motif)
+                  else args.motif.split(","))
+        deltas = [int(d) for d in str(args.delta).split(",")]
+        cfg = EstimateConfig(chunk=args.chunk, seed=args.seed)
+        with StreamingSession(config=cfg, horizon=args.horizon,
+                              mesh=mesh) as ss:
+            qids = {ss.subscribe(StandingQuery(m, d, args.k,
+                                               seed=args.seed)): (m, d)
+                    for m in motifs for d in deltas}
+            print(f"replaying {args.stream_replay}  horizon={args.horizon}  "
+                  f"batch={args.replay_batch}  queries={len(qids)}")
+            for er in replay_epochs(ss, args.stream_replay,
+                                    batch_size=args.replay_batch,
+                                    advance_every=args.advance_every):
+                ep = er.epoch
+                print(f"epoch {ep.index}: m={ep.m_real} n={ep.n_real} "
+                      f"t=[{ep.t_lo},{ep.t_hi}] evicted={ep.evicted} "
+                      f"buckets={ep.buckets} ({er.advance_s:.2f}s)")
+                for qid in sorted(er.results):
+                    res = er.results[qid]
+                    rse = res.rse
+                    print(f"  {qids[qid][0]:12s} delta={qids[qid][1]:<8d} "
+                          f"C^={res.estimate:12.4g}  "
+                          f"rse={'inf' if rse is None else f'{rse:.3f}'}  "
+                          f"k={res.k}")
+        return
+
+    g = parse_graph(args.graph)
 
     if args.serve:
         import sys

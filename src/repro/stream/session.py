@@ -1,0 +1,211 @@
+"""Standing motif queries over a live edge stream.
+
+A :class:`StreamingSession` couples a :class:`~repro.stream.store.StreamStore`
+with the session API: ``subscribe()`` registers a :class:`StandingQuery`
+(motif + delta + budget) once, and every ``advance()`` materializes the
+next epoch snapshot and re-estimates all standing queries against it
+through a fresh ``api.Session`` over that snapshot.
+
+What carries across epochs (the warm path):
+
+* the engine's compiled-window-program LRU and the per-tree preprocess
+  DP compiles are process-global — padded snapshots present stable
+  bucket shapes, so they re-hit instead of retracing (the whole point of
+  ``pad_snapshot``);
+* the frozen ``EstimateConfig`` (env backends resolved once, at
+  streaming-session construction);
+* the mesh.
+
+What does NOT carry: ``Weights`` and tree selection.  Weights are a
+function of the graph, so every epoch re-plans (Alg. 7 candidate ranking
++ preprocess) exactly as a cold ``estimate()`` on that snapshot would —
+which is what makes the determinism contract possible at all.
+
+**Epoch determinism contract**: the count reported for standing query
+``Q`` at epoch ``e`` is bit-identical to a cold
+``api.estimate(epoch.graph, Q.motif, Q.delta, Q.k, seed=Q.seed)`` on that
+epoch's snapshot graph (asserted by tests/test_stream.py for both
+sampler backends, across compaction and eviction boundaries).  Standing
+queries sharing a spanning tree fuse into one vmapped dispatch per
+window, exactly like ``estimate_many`` jobs — fusion is an execution
+optimization and never changes bits (engine contract).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from ..api.config import EstimateConfig
+from ..api.session import Request, Session
+from ..core.estimator import EstimateResult
+from ..core.motif import TemporalMotif, get_motif
+from .store import Epoch, StreamStore
+
+
+@dataclass(frozen=True)
+class StandingQuery:
+    """One registered query, re-estimated on every epoch.
+
+    ``motif`` accepts catalog names, inline edge-list specs
+    ("0-1,1-2,2-0") or a ``TemporalMotif``.  ``seed`` is re-used verbatim
+    each epoch, so the per-epoch estimate equals a cold ``estimate()``
+    with that seed on the epoch's snapshot.  ``target_rse``/``k_max``
+    make the per-epoch budget adaptive (session semantics).
+    """
+
+    motif: TemporalMotif | str
+    delta: int
+    k: int
+    seed: int = 0
+    target_rse: float | None = None
+    k_max: int | None = None
+    name: str | None = None
+
+    def __post_init__(self) -> None:
+        if isinstance(self.motif, str):
+            get_motif(self.motif)     # validate eagerly, not at advance
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+
+    @property
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        return self.motif if isinstance(self.motif, str) else self.motif.name
+
+
+@dataclass
+class EpochResult:
+    """Everything one ``advance()`` produced."""
+
+    epoch: Epoch
+    results: dict[int, EstimateResult]    # subscription id -> result
+    advance_s: float = 0.0                # snapshot + plan + estimate
+    estimate_s: float = 0.0               # the standing-query drain alone
+
+
+@dataclass
+class StreamStats:
+    epochs: int = 0
+    queries_run: int = 0
+    subscribe_calls: int = 0
+    advance_s_total: float = 0.0
+
+
+class StreamingSession:
+    """A persistent estimation service over a LIVE graph.
+
+    ::
+
+        ss = StreamingSession(horizon=100_000)
+        qid = ss.subscribe(StandingQuery("M5-3", delta=4_000, k=1 << 14))
+        ss.ingest(src, dst, t)              # repeatedly, as edges arrive
+        er = ss.advance()                   # epoch 0
+        print(er.results[qid].estimate, er.results[qid].rse)
+
+    ``store`` injects an existing :class:`StreamStore` (otherwise one is
+    built from ``horizon`` + ``store_kw``); ``config``/``mesh`` are the
+    session knobs, applied to every epoch's session.  ``session`` is the
+    CURRENT epoch's ``api.Session`` (None before the first advance) —
+    ad-hoc one-shot requests can go through :meth:`query`.
+    """
+
+    def __init__(self, store: StreamStore | None = None,
+                 config: EstimateConfig | None = None, *,
+                 horizon: int | None = None, mesh=None, **store_kw):
+        if store is not None and (horizon is not None or store_kw):
+            raise ValueError("pass either an existing store OR "
+                             "horizon/store kwargs, not both")
+        self.store = store if store is not None else StreamStore(
+            horizon=horizon, **store_kw)
+        self.config = (config or EstimateConfig()).resolve()
+        self.mesh = mesh
+        self.session: Session | None = None
+        self.epoch: Epoch | None = None
+        self.stats = StreamStats()
+        self._queries: dict[int, StandingQuery] = {}
+        self._next_qid = 0
+        self._closed = False
+
+    # -- lifecycle -------------------------------------------------------
+    def __enter__(self) -> "StreamingSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if not self._closed:
+            if self.session is not None:
+                self.session.close()
+            self._closed = True
+
+    # -- subscriptions ---------------------------------------------------
+    def subscribe(self, query: StandingQuery) -> int:
+        """Register a standing query; returns its subscription id."""
+        if self._closed:
+            raise RuntimeError("StreamingSession is closed")
+        qid = self._next_qid
+        self._next_qid += 1
+        self._queries[qid] = query
+        self.stats.subscribe_calls += 1
+        return qid
+
+    def unsubscribe(self, qid: int) -> StandingQuery:
+        return self._queries.pop(qid)
+
+    @property
+    def queries(self) -> dict[int, StandingQuery]:
+        return dict(self._queries)
+
+    # -- stream plumbing -------------------------------------------------
+    def ingest(self, src, dst, t) -> int:
+        if self._closed:
+            raise RuntimeError("StreamingSession is closed")
+        return self.store.ingest(src, dst, t)
+
+    # -- epochs ----------------------------------------------------------
+    def advance(self) -> EpochResult:
+        """Materialize the next epoch and re-estimate standing queries.
+
+        Swaps the resident session onto the new snapshot (the old
+        epoch's device arrays become garbage); compiled window programs
+        and preprocess DP compiles are process-global and survive the
+        swap — with padded snapshots they re-hit across epochs.
+        """
+        if self._closed:
+            raise RuntimeError("StreamingSession is closed")
+        t0 = time.perf_counter()
+        epoch = self.store.advance()
+        if self.session is not None:
+            self.session.close()
+        self.session = Session(epoch.graph, self.config, mesh=self.mesh)
+        self.epoch = epoch
+        t1 = time.perf_counter()
+        results: dict[int, EstimateResult] = {}
+        if self._queries:
+            items = list(self._queries.items())
+            handles = self.session.submit_many([
+                Request(motif=q.motif, delta=int(q.delta), k=int(q.k),
+                        seed=int(q.seed), target_rse=q.target_rse,
+                        k_max=q.k_max)
+                for _, q in items])
+            for (qid, _), h in zip(items, handles):
+                results[qid] = h.result()
+        dt = time.perf_counter() - t0
+        self.stats.epochs += 1
+        self.stats.queries_run += len(results)
+        self.stats.advance_s_total += dt
+        return EpochResult(epoch=epoch, results=results, advance_s=dt,
+                           estimate_s=time.perf_counter() - t1)
+
+    # -- ad-hoc queries --------------------------------------------------
+    def query(self, request: Request) -> EstimateResult:
+        """One-shot request against the CURRENT epoch's snapshot."""
+        if self.session is None:
+            raise RuntimeError("no epoch materialized yet — ingest edges "
+                               "and advance() first")
+        handle = self.session.submit(request)
+        return handle.result()
