@@ -10,6 +10,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# contract linter FIRST: a seconds-fast, jax-free gate over the whole
+# source tree (env-seam / retrace / determinism / exactness invariants —
+# see src/repro/analysis).  Fails the build before anything heavy runs.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.lint src/
+
 timeout 120 python -m pip install -q --disable-pip-version-check \
     -r requirements-dev.txt 2>/dev/null \
   || echo "ci: offline — running with preinstalled deps only"

@@ -1,0 +1,75 @@
+"""Contract linter + retrace sentinel — the repo's invariants as checks.
+
+This package is the canonical statement of the three contracts every
+TIMEST layer must honor, and the machinery that enforces them in CI
+(``scripts/ci.sh`` runs the linter as its first, fast-fail gate):
+
+**1. The config seam** (family ``env-seam``)
+    Every ``REPRO_*`` environment knob is declared once, in
+    ``repro/knobs.py``, and read only there (``get_knob``).  Core and
+    kernel code receives explicit values resolved at the config seam
+    (``api/config.py``) — it never reads ambient process state, and
+    nothing anywhere *writes* ``os.environ`` to smuggle configuration.
+    Why: PR 4 established "env resolved exactly once"; by PR 5 six
+    scattered reads had eroded it, making runs impossible to audit.
+
+**2. No retraces on warm paths** (family ``retrace``)
+    jit sites whose Python-level parameters reach ``range``/``arange``/
+    shape positions must declare them in ``static_argnames``
+    (``retrace-static-argnames``); factory closures must not bake
+    ``int()``/``float()``/``.item()``-coerced per-call scalars into a
+    traced function (``retrace-scalar-capture`` — the PR-5 ``Weights.q``
+    hazard, where a per-epoch total retraced every epoch).  The runtime
+    half is :func:`no_retrace` (sentinel.py): wrap a warm region, and it
+    raises :class:`RetraceError` if any compiled program's jit cache
+    grew.  Tests use the ``no_retrace`` fixture from ``tests/conftest``.
+
+**3. Determinism + exactness** (families ``determinism``, ``exactness``)
+    In the estimator layers, PRNG keys come from a seed via
+    ``fold_in(base_key, j)`` — never seed arithmetic
+    (``det-key-origin``); wall-clock, host-RNG state and set-iteration
+    order must not reach traced code (``det-impure-in-traced``,
+    ``det-host-rng``); and weight/count accumulators stay exact int64
+    unless the module carries the ``_F32_EXACT_MAX`` (2^24) guard that
+    makes an f32 excursion provably exact (``exact-narrowing-cast``).
+
+**Running it**::
+
+    python -m repro.analysis.lint src/        # exit 0 = clean
+    python -m repro.analysis.lint --list-rules
+
+**Suppressing a finding**: append to the flagged line (or the line
+above) ``# repro-lint: disable=rule-id(reason)``.  The reason is
+mandatory — a bare suppression is itself an error
+(``suppression-missing-reason``) — because the set of suppressions *is*
+the audit log of accepted hazards.  ``disable=all(reason)`` silences
+every rule at one site; use it only in test fixtures.
+
+**Adding a rule**: write ``check(module) -> list[Finding]`` in
+``rules.py`` over the pre-built :class:`walker.Module` indexes (parent
+links, import aliases, jit sites, traced-function set), register it with
+``@register(id, family, doc, scope)``, and add its minimal bad/clean
+trigger pair to ``tests/test_analysis.py``.  Scope is a tuple of path
+substrings (``registry.ESTIMATOR_SCOPES`` etc.) so contract rules police
+exactly the layers the contract binds.
+
+Import note: this package (and the lint CLI) never imports jax at
+module load; only :func:`no_retrace` touches ``repro.core.engine``, and
+only when entered.
+"""
+from . import rules as _rules  # noqa: F401  (registers the rule set)
+from .registry import RULES
+from .report import Finding
+from .sentinel import RetraceError, no_retrace
+
+__all__ = ["Finding", "RULES", "RetraceError", "lint_file", "lint_paths",
+           "main", "no_retrace"]
+
+
+def __getattr__(name):
+    # lint is imported lazily so `python -m repro.analysis.lint` doesn't
+    # import the module twice (runpy warns when __init__ pre-imports it)
+    if name in ("lint_file", "lint_paths", "main"):
+        from . import lint
+        return getattr(lint, name)
+    raise AttributeError(name)

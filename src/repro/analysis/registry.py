@@ -1,0 +1,63 @@
+"""Rule registry + path scoping for the contract linter.
+
+Rules register themselves via the :func:`register` decorator (see
+``rules.py``); the CLI asks :func:`rules_for` which rules apply to a
+given file.  Scoping is by posix-path substring — e.g. the determinism
+rules only police the estimator layers (``repro/core/``,
+``repro/kernels/``, ``repro/stream/``) where the bit-identity contract
+lives, while the env-seam rule watches the whole tree.
+
+``ENV_SEAM_REGISTRY`` names the ONE module allowed to read ``REPRO_*``
+environment variables (``repro.knobs`` — see its docstring for why the
+seam exists).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+# the single module allowed to touch REPRO_* env vars (rule env-seam)
+ENV_SEAM_REGISTRY = "repro/knobs.py"
+
+# layers bound by the exactness/determinism contracts
+ESTIMATOR_SCOPES = ("repro/core/", "repro/kernels/")
+DETERMINISM_SCOPES = ESTIMATOR_SCOPES + ("repro/stream/",)
+EVERYWHERE = ("",)
+
+# pseudo-rule for malformed suppression comments; never suppressible
+SUPPRESSION_RULE = "suppression-missing-reason"
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One registered lint rule."""
+
+    id: str
+    family: str          # env-seam | retrace | determinism | exactness
+    doc: str
+    scope: tuple         # path substrings; ("",) = every file
+    check: Callable      # fn(module: walker.Module) -> list[Finding]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register(id: str, family: str, doc: str, scope: tuple = EVERYWHERE):
+    """Class/function decorator: register ``fn(module) -> [Finding]``."""
+    def deco(fn):
+        if id in RULES:
+            raise ValueError(f"duplicate rule id {id!r}")
+        RULES[id] = Rule(id=id, family=family, doc=doc, scope=tuple(scope),
+                         check=fn)
+        return fn
+    return deco
+
+
+def rules_for(posix_path: str) -> list:
+    """Rules whose scope matches this file path (substring match)."""
+    return [r for r in RULES.values()
+            if any(s == "" or s in posix_path for s in r.scope)]
+
+
+def known_rule(rule_id: str) -> bool:
+    return rule_id in RULES or rule_id == "all"

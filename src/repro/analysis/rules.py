@@ -1,0 +1,494 @@
+"""The four contract-rule families (see ``analysis/__init__`` for the
+policy guide; each rule documents the hazard that motivated it).
+
+Every rule is a pure function ``check(module) -> [Finding]`` over the
+:class:`walker.Module` indexes, registered under a stable kebab-case id.
+Rules are heuristic by design — they encode the *specific* hazard shapes
+this repo has hit (scattered env reads, the PR-5 ``Weights.q`` retrace,
+seed-arithmetic keys, unguarded f32 narrowing), not general soundness.
+A false positive is suppressed in place with a written reason; a false
+negative is a missing rule, added here with its trigger snippet in
+``tests/test_analysis.py``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from .registry import (DETERMINISM_SCOPES, ENV_SEAM_REGISTRY,
+                       ESTIMATOR_SCOPES, register)
+from .report import Finding
+
+
+def _find(rule: str, mod, node: ast.AST, message: str) -> Finding:
+    return Finding(rule=rule, path=mod.path, line=node.lineno,
+                   col=node.col_offset, message=message)
+
+
+def _dotted_chain(node: ast.AST) -> list:
+    """``np.random.randint`` -> ["np", "random", "randint"] (else [])."""
+    parts: list = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return []
+
+
+# ---------------------------------------------------------------------------
+# family: env-seam
+# ---------------------------------------------------------------------------
+def _is_environ_expr(mod, node: ast.AST) -> bool:
+    if isinstance(node, ast.Name) and node.id in mod.environ_aliases:
+        return True
+    return (isinstance(node, ast.Attribute) and node.attr == "environ"
+            and isinstance(node.value, ast.Name)
+            and node.value.id in mod.os_aliases)
+
+
+def _is_getenv_call(mod, call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in mod.getenv_aliases:
+        return True
+    return (isinstance(f, ast.Attribute) and f.attr == "getenv"
+            and isinstance(f.value, ast.Name)
+            and f.value.id in mod.os_aliases)
+
+
+def _repro_name(arg) -> str | None:
+    if (arg is not None and isinstance(arg, ast.Constant)
+            and isinstance(arg.value, str) and arg.value.startswith("REPRO_")):
+        return arg.value
+    return None
+
+
+@register(
+    "env-seam", "env-seam",
+    "REPRO_* environment knobs may only be read in the declared registry "
+    f"({ENV_SEAM_REGISTRY}, via get_knob); writes are banned everywhere "
+    "(thread explicit config instead); and code under repro/core/ / "
+    "repro/kernels/ must not touch the environment at all.")
+def check_env_seam(mod) -> list:
+    out: list = []
+    if mod.posix.endswith(ENV_SEAM_REGISTRY):
+        return out
+    in_estimator = any(s in mod.posix for s in ESTIMATOR_SCOPES)
+    seen: set = set()
+
+    def flag(node, name, write=False):
+        key = (node.lineno, node.col_offset)
+        if key in seen:
+            return
+        seen.add(key)
+        what = name or "environment variable"
+        if write:
+            msg = (f"mutating {what} via os.environ: backend/tuning flags "
+                   "must thread through EstimateConfig / explicit "
+                   "arguments, not ambient process state")
+        elif name:
+            msg = (f"{what} read outside the knob registry "
+                   f"({ENV_SEAM_REGISTRY}): use repro.knobs.get_knob "
+                   "so the seam stays auditable")
+        else:
+            msg = ("environment read inside the estimator layers: core/ "
+                   "and kernels/ receive explicit values (resolved once "
+                   "at the config seam), never ambient env state")
+        out.append(_find("env-seam", mod, node, msg))
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and f.attr in ("get", "setdefault", "pop")
+                    and _is_environ_expr(mod, f.value)):
+                name = _repro_name(node.args[0] if node.args else None)
+                if name or in_estimator:
+                    flag(node, name, write=f.attr in ("setdefault", "pop"))
+            elif _is_getenv_call(mod, node):
+                name = _repro_name(node.args[0] if node.args else None)
+                if name or in_estimator:
+                    flag(node, name)
+        elif isinstance(node, ast.Subscript):
+            if _is_environ_expr(mod, node.value):
+                name = _repro_name(node.slice)
+                write = isinstance(node.ctx, (ast.Store, ast.Del))
+                if name or in_estimator or write and name:
+                    if name or in_estimator:
+                        flag(node, name, write=write)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# family: retrace
+# ---------------------------------------------------------------------------
+_PY_CALLS = {"int", "float", "max", "min", "abs", "round", "len", "divmod"}
+
+
+def _is_pythonic(expr: ast.AST) -> bool:
+    """Pure host-Python arithmetic: Name/Constant/BinOp/... only.
+
+    Attribute/Subscript access breaks the chain on purpose: ``x.shape[0]``
+    of a traced argument is *static* under jit (shape specialization, not
+    a retrace hazard), so taint must not flow through it.
+    """
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            if not (isinstance(node.func, ast.Name)
+                    and node.func.id in _PY_CALLS):
+                return False
+        elif isinstance(node, (ast.Attribute, ast.Subscript, ast.Lambda,
+                               ast.Await, ast.Yield, ast.YieldFrom)):
+            return False
+    return True
+
+
+def _pythonic_names(expr: ast.AST) -> set:
+    """Names reachable without crossing an Attribute/Subscript boundary."""
+    names: set = set()
+
+    def rec(node):
+        if isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, (ast.Attribute, ast.Subscript)):
+            return  # shape/element access: static under trace
+        elif isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _PY_CALLS):
+                for a in node.args:
+                    rec(a)
+            return
+        else:
+            for child in ast.iter_child_nodes(node):
+                rec(child)
+
+    rec(expr)
+    return names
+
+
+def _taint_roots(target: ast.FunctionDef) -> dict:
+    """name -> set of parameter names it derives from via host arithmetic."""
+    args = target.args
+    params = [a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)]
+    roots: dict = {p: {p} for p in params}
+    for _ in range(2):  # two passes for simple transitive chains
+        for node in ast.walk(target):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            if not _is_pythonic(node.value):
+                continue
+            derived: set = set()
+            for n in _pythonic_names(node.value):
+                derived |= roots.get(n, set())
+            name = node.targets[0].id
+            if derived and name not in params:
+                roots[name] = roots.get(name, set()) | derived
+    return roots
+
+
+_SHAPE_BUILDERS = {"zeros", "ones", "full", "empty"}
+
+
+@register(
+    "retrace-static-argnames", "retrace",
+    "a jit-wrapped function whose parameter flows (as a host Python value) "
+    "into range()/arange()/array-shape positions must declare it in "
+    "static_argnames — otherwise the call either fails to trace or, worse, "
+    "silently retraces per distinct value.")
+def check_static_argnames(mod) -> list:
+    out: list = []
+    for site in mod.jit_sites:
+        if (site.kind != "jit" or site.target is None
+                or site.has_static_argnums):
+            continue
+        roots = _taint_roots(site.target)
+        needed: set = set()
+        for node in ast.walk(site.target):
+            if not isinstance(node, ast.Call):
+                continue
+            hot_args: list = []
+            if isinstance(node.func, ast.Name) and node.func.id == "range":
+                hot_args = list(node.args)
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "arange"):
+                hot_args = list(node.args)
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _SHAPE_BUILDERS and node.args):
+                shape = node.args[0]
+                hot_args = (list(shape.elts)
+                            if isinstance(shape, (ast.Tuple, ast.List))
+                            else [shape])
+            for a in hot_args:
+                for n in _pythonic_names(a):
+                    needed |= roots.get(n, set())
+        missing = needed - set(site.static_names)
+        if missing:
+            out.append(_find(
+                "retrace-static-argnames", mod, site.node,
+                f"jit of '{site.target.name}' lacks static_argnames for "
+                f"{sorted(missing)}: these parameters drive "
+                "range()/arange()/shape positions, so they must be Python "
+                "values — an undeclared one silently specializes the "
+                "compile per value (retrace per call)"))
+    return out
+
+
+@register(
+    "retrace-scalar-capture", "retrace",
+    "a jit-wrapped closure capturing int()/float()-coerced scalars derived "
+    "from factory arguments bakes a per-instance Python value into the "
+    "trace: when the value varies per call/epoch the program retraces "
+    "(the PR-5 Weights.q hazard — keep such values traced, or static and "
+    "bucket-stable).")
+def check_scalar_capture(mod) -> list:
+    out: list = []
+    for site in mod.jit_sites:
+        g = site.target
+        if g is None:
+            continue
+        factory = mod.enclosing_function(g)
+        if factory is None:
+            continue
+        fargs = factory.args
+        fparams = {a.arg for a in (fargs.posonlyargs + fargs.args
+                                   + fargs.kwonlyargs)}
+        g_bound = {n.id for n in ast.walk(g)
+                   if isinstance(n, ast.Name)
+                   and isinstance(n.ctx, ast.Store)}
+        ga = g.args
+        g_bound |= {a.arg for a in (ga.posonlyargs + ga.args + ga.kwonlyargs)}
+        g_reads = {n.id for n in ast.walk(g)
+                   if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+        for node in ast.walk(factory):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            if mod.enclosing_function(node) is not factory:
+                continue  # assignment lives in a nested scope
+            name = node.targets[0].id
+            if name in g_bound or name not in g_reads:
+                continue
+            v = node.value
+            is_coerce = (isinstance(v, ast.Call)
+                         and ((isinstance(v.func, ast.Name)
+                               and v.func.id in ("int", "float"))
+                              or (isinstance(v.func, ast.Attribute)
+                                  and v.func.attr == "item")))
+            if not is_coerce:
+                continue
+            used_params = {n.id for n in ast.walk(v)
+                           if isinstance(n, ast.Name)} & fparams
+            if used_params:
+                out.append(_find(
+                    "retrace-scalar-capture", mod, node,
+                    f"'{name}' is a host scalar coerced from factory "
+                    f"argument(s) {sorted(used_params)} and captured by "
+                    f"the jit-wrapped '{g.name}': a per-call value here "
+                    "retraces the program each time it changes — pass it "
+                    "as a traced array, or declare the capture static "
+                    "and shape/bucket-stable"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# family: determinism
+# ---------------------------------------------------------------------------
+def _seedish(arg: ast.AST) -> bool:
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Call) and isinstance(arg.func, ast.Name) \
+            and arg.func.id == "int" and arg.args:
+        return _seedish(arg.args[0])
+    if isinstance(arg, ast.Name):
+        return "seed" in arg.id.lower()
+    if isinstance(arg, ast.Attribute):
+        return "seed" in arg.attr.lower()
+    return False
+
+
+@register(
+    "det-key-origin", "determinism",
+    "inside the estimator layers, PRNG base keys come from a seed and "
+    "per-unit keys from fold_in(base_key, j) — PRNGKey(seed + j)-style "
+    "arithmetic collides across (seed, unit) pairs and breaks the "
+    "bit-identity contract.",
+    scope=DETERMINISM_SCOPES)
+def check_key_origin(mod) -> list:
+    out: list = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "PRNGKey"):
+            continue
+        arg = node.args[0] if node.args else None
+        if arg is None or _seedish(arg):
+            continue
+        out.append(_find(
+            "det-key-origin", mod, node,
+            "PRNGKey derived from a computed expression: base keys must "
+            "come straight from a seed, and per-chunk/per-unit keys from "
+            "fold_in(base_key, j) (the engine determinism contract) — "
+            "seed arithmetic aliases key streams across runs"))
+    return out
+
+
+_WALLCLOCK = {("time", "time"), ("time", "time_ns"), ("time", "monotonic"),
+              ("time", "perf_counter")}
+
+
+@register(
+    "det-impure-in-traced", "determinism",
+    "wall-clock reads, stdlib/numpy RNG state and set-iteration order "
+    "inside a traced (jit/pallas) function bake nondeterminism into "
+    "compiled programs.")
+def check_impure_in_traced(mod) -> list:
+    out: list = []
+
+    def traced(node) -> bool:
+        return mod.in_traced_code(node)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            chain = _dotted_chain(node.func)
+            if not chain or not traced(node):
+                continue
+            if (chain[0], chain[-1]) in _WALLCLOCK:
+                out.append(_find(
+                    "det-impure-in-traced", mod, node,
+                    f"{'.'.join(chain)}() inside a traced function: the "
+                    "wall-clock value is frozen at trace time and varies "
+                    "per compile — results stop being a pure function of "
+                    "(graph, seed)"))
+            elif chain[0] in ("datetime",) and chain[-1] in ("now", "utcnow"):
+                out.append(_find(
+                    "det-impure-in-traced", mod, node,
+                    "datetime read inside a traced function (see "
+                    "det-impure-in-traced: trace-time nondeterminism)"))
+            elif (chain[0] in ("np", "numpy") and len(chain) > 2
+                  and chain[1] == "random") \
+                    or chain[0] in mod.stdlib_random_aliases:
+                out.append(_find(
+                    "det-impure-in-traced", mod, node,
+                    f"{'.'.join(chain)}() inside a traced function: host "
+                    "RNG state is consumed at trace time, so retraces "
+                    "(or cache hits) change results — use jax.random "
+                    "keys derived via fold_in"))
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            it = node.iter
+            if not traced(it if isinstance(node, ast.For) else it):
+                continue
+            if isinstance(it, ast.Set) or (
+                    isinstance(it, ast.Call)
+                    and isinstance(it.func, ast.Name)
+                    and it.func.id in ("set", "frozenset")):
+                out.append(_find(
+                    "det-impure-in-traced", mod, it,
+                    "iterating a set inside a traced function: iteration "
+                    "order is hash-dependent, so the traced program "
+                    "structure (and results) can vary per process — "
+                    "sort it first"))
+    return out
+
+
+@register(
+    "det-host-rng", "determinism",
+    "stdlib `random` and numpy global-state RNG are banned in the "
+    "estimator layers; np.random.default_rng(seed) with an explicit seed "
+    "is the only sanctioned host RNG.",
+    scope=DETERMINISM_SCOPES)
+def check_host_rng(mod) -> list:
+    out: list = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = (node.names if isinstance(node, ast.Import) else [])
+            if any(a.name == "random" for a in names) or (
+                    isinstance(node, ast.ImportFrom)
+                    and node.module == "random"):
+                out.append(_find(
+                    "det-host-rng", mod, node,
+                    "stdlib `random` in an estimator layer: hidden global "
+                    "state breaks run-to-run determinism — derive "
+                    "randomness from jax.random keys or a seeded "
+                    "np.random.default_rng"))
+        elif isinstance(node, ast.Call):
+            chain = _dotted_chain(node.func)
+            if (len(chain) >= 3 and chain[0] in ("np", "numpy")
+                    and chain[1] == "random"):
+                if chain[2] == "default_rng":
+                    if not node.args:
+                        out.append(_find(
+                            "det-host-rng", mod, node,
+                            "np.random.default_rng() without a seed: "
+                            "OS-entropy seeding makes results "
+                            "irreproducible — pass an explicit seed"))
+                else:
+                    out.append(_find(
+                        "det-host-rng", mod, node,
+                        f"np.random.{chain[2]} uses numpy's global RNG "
+                        "state: call order changes results — use a "
+                        "seeded np.random.default_rng(seed) generator"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# family: exactness
+# ---------------------------------------------------------------------------
+_WEIGHT_IDENT = re.compile(
+    r"\b(ps_win|ps_acc\w*|ps_pair\w*|w_own|w_prev|W_total|W_win|acc|cnt2?)\b")
+_NARROW_ATTRS = {"float32", "int32", "float16", "bfloat16"}
+_NARROW_NAMES = {"_F32", "_I32"}
+_GUARD_MARKS = ("_F32_EXACT_MAX", "2 ** 24", "2**24", "1 << 24")
+
+
+def _is_narrow_dtype(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name) and node.id in _NARROW_NAMES:
+        return True
+    if isinstance(node, ast.Attribute) and node.attr in _NARROW_ATTRS:
+        return True
+    return (isinstance(node, ast.Constant) and node.value in _NARROW_ATTRS)
+
+
+@register(
+    "exact-narrowing-cast", "exactness",
+    "weight/count accumulators are exact int64 (paper Table 7: W up to "
+    "~1e15); casting one to f32/int32 is only sound inside the declared "
+    "2^24 f32-exact envelope — the narrowing module must carry the "
+    "_F32_EXACT_MAX guard that enforces it.",
+    scope=ESTIMATOR_SCOPES)
+def check_narrowing_cast(mod) -> list:
+    if any(mark in mod.source for mark in _GUARD_MARKS):
+        return []   # module declares + enforces the f32-exact envelope
+    out: list = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        subject = None
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype" and node.args
+                and _is_narrow_dtype(node.args[0])):
+            subject = node.func.value
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in ("asarray", "array") and node.args):
+            dtype = None
+            if len(node.args) >= 2:
+                dtype = node.args[1]
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    dtype = kw.value
+            if dtype is not None and _is_narrow_dtype(dtype):
+                subject = node.args[0]
+        if subject is None:
+            continue
+        text = ast.unparse(subject)
+        m = _WEIGHT_IDENT.search(text)
+        if m:
+            out.append(_find(
+                "exact-narrowing-cast", mod, node,
+                f"narrowing cast of weight/accumulator value '{text}' "
+                "(matched '" + m.group(1) + "') without an adjacent "
+                "2^24 exactness guard: f32 holds integers exactly only "
+                "below 2^24 — gate via _F32_EXACT_MAX (and fall back to "
+                "the exact int64 path) before narrowing"))
+    return out

@@ -1,0 +1,111 @@
+"""Runtime retrace sentinel: fail the test when a warm path recompiles.
+
+The static rules (rules.py) catch retrace hazards by shape; this module
+catches the ones that only manifest at runtime.  ``no_retrace()`` wraps
+a region that is *supposed* to reuse already-compiled programs — a warm
+epoch, a repeat query, a resumed checkpoint — and raises
+:class:`RetraceError` if any jit cache grew inside it:
+
+    with no_retrace() as probe:
+        session.submit_many(requests)          # warm path
+    assert probe.dispatches > 0                # it did run...
+    # ...and no_retrace verified nothing recompiled
+
+Watched state:
+
+* every compiled window program in ``engine._WINDOW_FN_LRU`` that was
+  present at entry — its ``_cache_size()`` (jax's per-function compile
+  count) must not grow;
+* any extra jitted callables passed via ``watch=[fn, ...]``;
+* new LRU keys appearing during the region — a new key is a fresh
+  compile by definition, so it fails unless ``allow_new_programs=True``
+  (first-touch regions that legitimately compile new programs).
+
+Keys evicted inside the region are treated as unchanged (the LRU is
+bounded; eviction is capacity policy, not a retrace).  The probe also
+exposes ``dispatches`` — the ``engine.STATS.dispatches`` delta — so
+tests can assert the region actually exercised the engine rather than
+silently skipping it.
+
+jax is imported lazily (via repro.core.engine) so that importing
+``repro.analysis`` — e.g. from the lint CLI — stays dependency-light.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+
+class RetraceError(AssertionError):
+    """A region declared retrace-free compiled something."""
+
+
+@dataclass
+class RetraceProbe:
+    """Mutable view of the sentinel region, yielded by ``no_retrace``."""
+
+    entry_sizes: dict = field(default_factory=dict)
+    entry_watch: list = field(default_factory=list)
+    entry_dispatches: int = 0
+    dispatches: int = 0          # STATS.dispatches delta, filled on exit
+    new_keys: tuple = ()         # LRU keys first seen inside the region
+
+
+def _cache_size(fn) -> int | None:
+    size = getattr(fn, "_cache_size", None)
+    return size() if callable(size) else None
+
+
+@contextmanager
+def no_retrace(watch=(), allow_new_programs: bool = False):
+    """Context manager asserting no jit recompiles happen inside it.
+
+    ``watch`` — extra jitted callables (anything exposing jax's
+    ``_cache_size()``) to monitor alongside the engine window LRU.
+    ``allow_new_programs`` — permit *new* window programs to compile
+    (first contact with a new (tree, chunk, n) shape) while still
+    forbidding growth on pre-existing ones.
+    """
+    from ..core import engine
+
+    probe = RetraceProbe()
+    for key, fn in engine._WINDOW_FN_LRU.items():
+        size = _cache_size(fn)
+        if size is not None:
+            probe.entry_sizes[key] = size
+    probe.entry_watch = [(fn, _cache_size(fn)) for fn in watch]
+    probe.entry_dispatches = engine.STATS.dispatches
+
+    yield probe
+
+    probe.dispatches = engine.STATS.dispatches - probe.entry_dispatches
+    failures: list = []
+    new_keys: list = []
+    for key, fn in engine._WINDOW_FN_LRU.items():
+        size = _cache_size(fn)
+        if size is None:
+            continue
+        if key in probe.entry_sizes:
+            if size > probe.entry_sizes[key]:
+                failures.append(
+                    f"window program {key!r} recompiled: cache size "
+                    f"{probe.entry_sizes[key]} -> {size}")
+        else:
+            new_keys.append(key)
+    probe.new_keys = tuple(new_keys)
+    if new_keys and not allow_new_programs:
+        failures.append(
+            f"{len(new_keys)} new window program(s) compiled inside a "
+            f"no_retrace region: {new_keys!r} (pass "
+            "allow_new_programs=True if first-touch compiles are expected)")
+    for fn, size0 in probe.entry_watch:
+        size1 = _cache_size(fn)
+        if size0 is not None and size1 is not None and size1 > size0:
+            failures.append(
+                f"watched fn {getattr(fn, '__name__', fn)!r} recompiled: "
+                f"cache size {size0} -> {size1}")
+    if failures:
+        raise RetraceError(
+            "no_retrace region recompiled (likely a static closure "
+            "capturing a per-call value — see rule retrace-scalar-capture "
+            "in repro.analysis):\n  " + "\n  ".join(failures))

@@ -1,0 +1,291 @@
+"""Shared AST infrastructure for the contract linter (stdlib ``ast`` only).
+
+Parses one file into a :class:`Module` carrying the derived indexes every
+rule needs, so each rule is a small pass over precomputed structure:
+
+* **parent links** — every node gets ``._rl_parent``, giving rules
+  ``enclosing_function`` / lexical-scope walks;
+* **import aliases** — which local names mean ``jax`` / ``os`` /
+  ``jax.numpy`` / stdlib ``random`` (handles ``import jax as _jax``,
+  ``from os import environ``, ...);
+* **jit sites** — every ``jax.jit(f, ...)`` call, ``@jax.jit`` /
+  ``@partial(jax.jit, ...)`` decorator, resolved (where possible) to the
+  ``FunctionDef`` it wraps, plus its declared ``static_argnames`` /
+  whether ``static_argnums`` is present;
+* **traced functions** — the transitive set of function bodies that
+  execute under tracing: jit targets, ``pl.pallas_call`` kernels, and
+  everything lexically nested inside them;
+* **suppressions** — ``# repro-lint: disable=rule(reason)`` comments,
+  parsed per line.  A suppression applies to findings on its own line
+  and on the line directly below (comment-above style).  ``disable=all``
+  suppresses every rule at that site.  A suppression without a written
+  reason is itself a finding (the reason is the point: the suppression
+  log is the audit trail of accepted hazards).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=(.*)$")
+_ITEM_RE = re.compile(r"([\w-]+)\s*(\(([^()]*)\))?")
+_SEP_RE = re.compile(r"\s*,\s*")
+
+
+@dataclass
+class JitSite:
+    """One jit/pallas wrap site resolved against its target function."""
+
+    node: ast.AST                      # the Call / decorator expression
+    target: ast.FunctionDef | None     # wrapped function, when resolvable
+    static_names: frozenset = frozenset()
+    has_static_argnums: bool = False
+    kind: str = "jit"                  # "jit" | "pallas"
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+
+@dataclass
+class Module:
+    path: str                          # as given to the CLI
+    posix: str                         # normalized with "/" separators
+    source: str
+    tree: ast.Module
+    lines: list = field(default_factory=list)
+    jax_aliases: set = field(default_factory=set)     # names meaning jax
+    os_aliases: set = field(default_factory=set)      # names meaning os
+    environ_aliases: set = field(default_factory=set)  # from os import environ
+    getenv_aliases: set = field(default_factory=set)   # from os import getenv
+    jit_aliases: set = field(default_factory=set)      # from jax import jit
+    stdlib_random_aliases: set = field(default_factory=set)
+    jit_sites: list = field(default_factory=list)
+    traced_functions: set = field(default_factory=set)  # FunctionDef nodes
+    suppressions: dict = field(default_factory=dict)  # line -> {rule: reason}
+    bare_suppressions: list = field(default_factory=list)  # [(line, item)]
+    unknown_suppressions: list = field(default_factory=list)
+
+    # -- scope helpers ----------------------------------------------------
+    def parent(self, node: ast.AST):
+        return getattr(node, "_rl_parent", None)
+
+    def enclosing_function(self, node: ast.AST):
+        n = self.parent(node)
+        while n is not None and not isinstance(n, (ast.FunctionDef,
+                                                   ast.AsyncFunctionDef)):
+            n = self.parent(n)
+        return n
+
+    def in_traced_code(self, node: ast.AST) -> bool:
+        fn = self.enclosing_function(node)
+        while fn is not None:
+            if fn in self.traced_functions:
+                return True
+            fn = self.enclosing_function(fn)
+        return False
+
+    def is_suppressed(self, rule_id: str, line: int) -> bool:
+        for at in (line, line - 1):
+            rules = self.suppressions.get(at, {})
+            if rule_id in rules or "all" in rules:
+                return True
+        return False
+
+    # -- jax expression helpers -------------------------------------------
+    def is_jax_attr(self, node: ast.AST, attr: str) -> bool:
+        """``<jax alias>.<attr>`` or a chain like ``jax.random.<attr>``."""
+        if not (isinstance(node, ast.Attribute) and node.attr == attr):
+            return False
+        base = node.value
+        while isinstance(base, ast.Attribute):
+            base = base.value
+        return isinstance(base, ast.Name) and base.id in self.jax_aliases
+
+    def is_jit_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name) and node.id in self.jit_aliases:
+            return True
+        return self.is_jax_attr(node, "jit")
+
+
+def _link_parents(tree: ast.Module) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._rl_parent = node
+
+
+def _collect_imports(mod: Module) -> None:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name
+                if a.name == "jax":
+                    mod.jax_aliases.add(name)
+                elif a.name == "os":
+                    mod.os_aliases.add(name)
+                elif a.name == "random":
+                    mod.stdlib_random_aliases.add(name)
+                elif a.name == "jax.numpy":
+                    mod.jax_aliases.add(name.split(".")[0]
+                                        if a.asname is None else name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "os":
+                for a in node.names:
+                    name = a.asname or a.name
+                    if a.name == "environ":
+                        mod.environ_aliases.add(name)
+                    elif a.name == "getenv":
+                        mod.getenv_aliases.add(name)
+            elif node.module == "jax":
+                for a in node.names:
+                    if a.name == "jit":
+                        mod.jit_aliases.add(a.asname or a.name)
+            elif node.module == "random":
+                mod.stdlib_random_aliases.add("__from_random__")
+
+
+def _static_info(call: ast.Call) -> tuple[frozenset, bool]:
+    names: set = set()
+    has_nums = False
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                for el in v.elts:
+                    if isinstance(el, ast.Constant) and isinstance(el.value,
+                                                                   str):
+                        names.add(el.value)
+        elif kw.arg == "static_argnums":
+            has_nums = True
+    return frozenset(names), has_nums
+
+
+def _function_index(tree: ast.Module) -> dict:
+    """name -> [FunctionDef, ...] in source order (for Name resolution)."""
+    idx: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            idx.setdefault(node.name, []).append(node)
+    return idx
+
+def _resolve_target(mod: Module, fn_index: dict, arg: ast.AST,
+                    at_line: int):
+    """Best-effort: a Name argument -> the nearest preceding FunctionDef."""
+    if not isinstance(arg, ast.Name):
+        return None
+    cands = [f for f in fn_index.get(arg.id, []) if f.lineno <= at_line]
+    return cands[-1] if cands else (fn_index.get(arg.id) or [None])[-1]
+
+
+def _is_partial(mod: Module, node: ast.AST) -> bool:
+    if isinstance(node, ast.Name) and node.id == "partial":
+        return True
+    return isinstance(node, ast.Attribute) and node.attr == "partial"
+
+
+def _collect_jit_sites(mod: Module) -> None:
+    fn_index = _function_index(mod.tree)
+
+    # decorator forms
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            if mod.is_jit_expr(dec):
+                mod.jit_sites.append(JitSite(node=dec, target=node))
+            elif (isinstance(dec, ast.Call) and mod.is_jit_expr(dec.func)):
+                names, nums = _static_info(dec)
+                mod.jit_sites.append(JitSite(
+                    node=dec, target=node, static_names=names,
+                    has_static_argnums=nums))
+            elif (isinstance(dec, ast.Call) and _is_partial(mod, dec.func)
+                    and dec.args and mod.is_jit_expr(dec.args[0])):
+                names, nums = _static_info(dec)
+                mod.jit_sites.append(JitSite(
+                    node=dec, target=node, static_names=names,
+                    has_static_argnums=nums))
+
+    # call forms: jax.jit(fn, ...) and pl.pallas_call(kernel, ...)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if mod.is_jit_expr(node.func):
+            target = _resolve_target(
+                mod, fn_index, node.args[0] if node.args else None,
+                node.lineno)
+            names, nums = _static_info(node)
+            mod.jit_sites.append(JitSite(
+                node=node, target=target, static_names=names,
+                has_static_argnums=nums))
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "pallas_call"):
+            target = _resolve_target(
+                mod, fn_index, node.args[0] if node.args else None,
+                node.lineno)
+            if target is not None:
+                mod.jit_sites.append(JitSite(node=node, target=target,
+                                             kind="pallas"))
+
+    # traced set: every wrap target + everything lexically inside it
+    roots = {s.target for s in mod.jit_sites if s.target is not None}
+    for root in roots:
+        for node in ast.walk(root):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                mod.traced_functions.add(node)
+
+
+def _comment_tokens(source: str):
+    """Real COMMENT tokens only — never text inside string literals."""
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.string
+    except tokenize.TokenError:
+        return
+
+
+def _collect_suppressions(mod: Module) -> None:
+    from .registry import known_rule
+    for line_no, comment in _comment_tokens(mod.source):
+        m = _SUPPRESS_RE.search(comment)
+        if not m:
+            continue
+        body = m.group(1).strip()
+        entry = mod.suppressions.setdefault(line_no, {})
+        pos = 0
+        while pos < len(body):
+            item = _ITEM_RE.match(body, pos)
+            if not item or not item.group(1):
+                break
+            rule_id, has_reason, reason = (item.group(1), item.group(2),
+                                           item.group(3))
+            if not has_reason or not (reason or "").strip():
+                mod.bare_suppressions.append((line_no, rule_id))
+            elif not known_rule(rule_id):
+                mod.unknown_suppressions.append((line_no, rule_id))
+            else:
+                entry[rule_id] = reason.strip()
+            pos = item.end()
+            sep = _SEP_RE.match(body, pos)
+            if not sep:
+                break   # anything after the item list is trailing prose
+            pos = sep.end()
+
+
+def parse_module(path: str, source: str | None = None) -> Module:
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    tree = ast.parse(source, filename=path)
+    mod = Module(path=path, posix=path.replace("\\", "/"), source=source,
+                 tree=tree, lines=source.splitlines())
+    _link_parents(tree)
+    _collect_imports(mod)
+    _collect_jit_sites(mod)
+    _collect_suppressions(mod)
+    return mod

@@ -12,11 +12,15 @@ around instead; ``EstimateConfig.resolve()`` (called once, at
 * ``REPRO_DEPSUM_BACKEND``   -> ``depsum_backend``  ("xla" | "pallas")
 
 so everything below the API layer receives explicit values and core code
-never needs to re-read the environment mid-run.  (The remaining
-``REPRO_*`` knobs — ``REPRO_ENGINE_CACHE``, ``REPRO_BISECT_ITERS``,
-``REPRO_SAMPLER_VMEM_MB``, ``REPRO_SAMPLER_BLOCK`` — are process-level
-tuning parameters read where they apply; they change performance, never
-results, so they stay out of the result-affecting config surface.)
+never needs to re-read the environment mid-run.  Every ``REPRO_*`` knob
+is declared in the ``repro.knobs`` registry and read only through
+``knobs.get_knob`` — the ``repro.analysis`` linter (rule ``env-seam``,
+a CI gate) errors on any other ``os.environ`` touch of a ``REPRO_*``
+name, so the seam can no longer silently erode.  (The perf-only knobs —
+``REPRO_ENGINE_CACHE``, ``REPRO_BISECT_ITERS``, ``REPRO_SAMPLER_VMEM_MB``,
+``REPRO_SAMPLER_BLOCK`` — are resolved at their use sites via the
+registry; they change performance, never results, so they stay out of
+the result-affecting config surface.)
 
 Configs are frozen dataclasses: hashable, comparable, safe to use as
 cache keys and to share across sessions.  ``replace()`` (the stdlib

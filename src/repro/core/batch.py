@@ -188,7 +188,11 @@ def sample_matches_many(g: TemporalGraph, specs: Sequence, K: int,
         if tree not in fns:
             fns[tree] = (make_sample_fn(tree, K), make_count_fn(tree, K))
         sample_fn, count_fn = fns[tree]
-        s = sample_fn(dev, wts, jax.random.PRNGKey(seed + j))
+        # spec j draws from fold_in(PRNGKey(seed), j) per the determinism
+        # contract — seed-arithmetic keys (PRNGKey(seed + j)) collide
+        # across (seed, j) pairs
+        s = sample_fn(dev, wts, jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                   j))
         c = count_fn(dev, wts, s)
         out.append(dict(motif=motif, tree=tree, phi_v=s["phi_v"],
                         cnt2=c["cnt2"], valid=c["valid"],

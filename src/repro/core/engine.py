@@ -64,6 +64,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any
 
+from ..knobs import get_knob
 from ..util import ensure_x64
 
 ensure_x64()
@@ -168,7 +169,7 @@ _WINDOW_FN_LRU: OrderedDict = OrderedDict()
 
 
 def _cache_capacity() -> int:
-    return max(1, int(os.environ.get("REPRO_ENGINE_CACHE", 32)))
+    return max(1, get_knob("REPRO_ENGINE_CACHE"))
 
 
 def cached_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,

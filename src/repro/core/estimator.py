@@ -132,6 +132,7 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
              dev: dict | None = None,
              wts: Weights | None = None,
              sampler_backend: str | None = None,
+             depsum_backend: str | None = None,
              mesh=None) -> EstimateResult:
     """Alg. 6: the full TIMEST estimate with ``k`` samples.
 
@@ -140,7 +141,8 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
 
     ``sampler_backend`` ("xla" | "pallas", default env
     ``REPRO_SAMPLER_BACKEND``) routes sampling through the fused
-    kernels/tree_sampler Pallas kernel; results are bit-identical.  The
+    kernels/tree_sampler Pallas kernel; ``depsum_backend`` likewise
+    routes weight preprocessing; results are bit-identical.  The
     pallas path silently downgrades to xla when the job sits outside the
     kernel envelope (weights past f32-exact 2^24, time bounds past int32,
     or VMEM budget) — the backend actually used and the veto reason are
@@ -163,7 +165,7 @@ def estimate(g: TemporalGraph, motif: TemporalMotif, delta: int, k: int,
                          checkpoint_every=checkpoint_every,
                          n_candidates=n_candidates, use_c2=use_c2,
                          use_c3=use_c3, sampler_backend=sampler_backend,
-                         seed=int(seed))
+                         depsum_backend=depsum_backend, seed=int(seed))
     session = Session(g, cfg, dev=dev, mesh=mesh)
     handle, = session.submit_many([Request(
         motif=motif, delta=int(delta), k=int(k), seed=int(seed),

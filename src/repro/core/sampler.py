@@ -20,8 +20,7 @@ Pipeline per sample (all steps data-parallel over K):
 """
 from __future__ import annotations
 
-import os
-
+from ..knobs import get_knob
 from ..util import ensure_x64
 
 ensure_x64()
@@ -37,8 +36,7 @@ def bisect_iters(m: int) -> int:
     """Adaptive bisection depth: ceil(log2(m))+1 covers any segment of an
     m-edge graph (vs a conservative fixed 40 — §Perf C1).
     ``REPRO_BISECT_ITERS`` overrides (A/B tuning)."""
-    return (int(os.environ.get("REPRO_BISECT_ITERS", 0))
-            or max(8, int(m).bit_length() + 1))
+    return get_knob("REPRO_BISECT_ITERS") or max(8, int(m).bit_length() + 1)
 
 
 def sampler_backend(backend: str | None = None) -> str:
@@ -53,7 +51,7 @@ def sampler_backend(backend: str | None = None) -> str:
                callers gate on ``tree_sampler.ops.pallas_sampler_eligible``
                and fall back to "xla" otherwise (``estimate`` does this).
     """
-    b = backend or os.environ.get("REPRO_SAMPLER_BACKEND", "xla")
+    b = backend or get_knob("REPRO_SAMPLER_BACKEND")
     if b not in ("xla", "pallas"):
         raise ValueError(f"REPRO_SAMPLER_BACKEND={b!r} (want xla|pallas)")
     return b

@@ -25,13 +25,13 @@ scheme documented for TPUs without native int64.
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass
 from functools import lru_cache, partial
 from typing import Any
 
 import numpy as np
 
+from ..knobs import get_knob
 from ..util import ensure_x64
 from .graph import TemporalGraph, pad_bucket
 from .spanning_tree import AFTER, BEFORE, IN, OUT, SpanningTree
@@ -57,7 +57,7 @@ def depsum_backend(backend: str | None = None) -> str:
                returned ``exact`` flag and fall back when counts overflow
                f32's exact-integer range (``preprocess`` does this).
     """
-    b = backend or os.environ.get("REPRO_DEPSUM_BACKEND", "xla")
+    b = backend or get_knob("REPRO_DEPSUM_BACKEND")
     if b not in ("xla", "pallas"):
         raise ValueError(f"REPRO_DEPSUM_BACKEND={b!r} (want xla|pallas)")
     return b

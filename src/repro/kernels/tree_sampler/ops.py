@@ -16,8 +16,6 @@ use to fall back to XLA outside the kernel's exactness/capacity envelope:
 """
 from __future__ import annotations
 
-import os
-
 from ...util import ensure_x64
 
 ensure_x64()
@@ -26,6 +24,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from ...core.sampler import bisect_iters  # noqa: E402
+from ...knobs import get_knob  # noqa: E402
 from ...core.spanning_tree import SpanningTree  # noqa: E402
 from .kernel import build_schedule, tree_sampler_call  # noqa: E402
 
@@ -124,7 +123,7 @@ def pallas_sampler_eligible(dev, wts, *, vmem_budget_bytes: int | None = None
     P = int(dev["pair_ptr"].shape[0]) - 1
     need = kernel_vmem_bytes(m, n, P, wts.q_pad, wts.tree.num_edges)
     budget = (vmem_budget_bytes if vmem_budget_bytes is not None
-              else int(os.environ.get("REPRO_SAMPLER_VMEM_MB", 192)) << 20)
+              else get_knob("REPRO_SAMPLER_VMEM_MB") << 20)
     if need > budget:
         return False, (f"kernel-resident structure {need} B exceeds VMEM "
                        f"budget {budget} B (REPRO_SAMPLER_VMEM_MB)")
@@ -145,7 +144,7 @@ def make_pallas_sample_fn(tree: SpanningTree, K: int, *, bk: int | None = None,
     root = tree.root
     schedule = build_schedule(tree)
     if bk is None:
-        bk = int(os.environ.get("REPRO_SAMPLER_BLOCK", 1024))
+        bk = get_knob("REPRO_SAMPLER_BLOCK")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 

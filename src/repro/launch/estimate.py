@@ -66,7 +66,6 @@ siblings).
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def parse_graph(spec: str):
@@ -158,10 +157,6 @@ def main() -> None:
     if args.devices:
         from .mesh import force_host_device_count
         force_host_device_count(args.devices)
-    if args.depsum_backend:
-        os.environ["REPRO_DEPSUM_BACKEND"] = args.depsum_backend
-    if args.sampler_backend:
-        os.environ["REPRO_SAMPLER_BACKEND"] = args.sampler_backend
 
     from ..core.estimator import estimate
     from ..core.motif import get_motif, is_motif_spec
@@ -175,7 +170,9 @@ def main() -> None:
         from ..stream import StreamingSession
         cfg = EstimateConfig(chunk=args.chunk, seed=args.seed,
                              coalesce_window_s=args.coalesce_window,
-                             coalesce_max_requests=args.coalesce_max)
+                             coalesce_max_requests=args.coalesce_max,
+                             sampler_backend=args.sampler_backend,
+                             depsum_backend=args.depsum_backend)
         with StreamingSession(config=cfg, horizon=args.horizon,
                               mesh=mesh) as ss:
             print(f"serving LIVE stream  horizon={args.horizon}  "
@@ -191,7 +188,9 @@ def main() -> None:
         motifs = ([args.motif] if is_motif_spec(args.motif)
                   else args.motif.split(","))
         deltas = [int(d) for d in str(args.delta).split(",")]
-        cfg = EstimateConfig(chunk=args.chunk, seed=args.seed)
+        cfg = EstimateConfig(chunk=args.chunk, seed=args.seed,
+                             sampler_backend=args.sampler_backend,
+                             depsum_backend=args.depsum_backend)
         with StreamingSession(config=cfg, horizon=args.horizon,
                               mesh=mesh) as ss:
             qids = {ss.subscribe(StandingQuery(m, d, args.k,
@@ -223,7 +222,9 @@ def main() -> None:
         from ..api import EstimateConfig, Session, serve_loop
         cfg = EstimateConfig(chunk=args.chunk, seed=args.seed,
                              coalesce_window_s=args.coalesce_window,
-                             coalesce_max_requests=args.coalesce_max)
+                             coalesce_max_requests=args.coalesce_max,
+                             sampler_backend=args.sampler_backend,
+                             depsum_backend=args.depsum_backend)
         session = Session(g, cfg, mesh=mesh)
         # stdout is the response stream — logs go to stderr
         print(f"serving graph n={g.n} m={g.m} span={g.time_span}  "
@@ -251,7 +252,8 @@ def main() -> None:
         jobs = [(m, d, args.k) for m in motifs for d in deltas]
         exact_cache: dict = {}
         for res in estimate_many(g, jobs, seed=args.seed, chunk=args.chunk,
-                                 mesh=mesh):
+                                 sampler_backend=args.sampler_backend,
+                                 backend=args.depsum_backend, mesh=mesh):
             print(f"delta={res.delta}  fused={res.fused_jobs}  "
                   f"{res.summary()}")
             if args.exact:
@@ -268,7 +270,8 @@ def main() -> None:
     motif = get_motif(motifs[0])
     res = estimate(g, motif, deltas[0], args.k, seed=args.seed,
                    chunk=args.chunk, checkpoint_path=args.checkpoint,
-                   mesh=mesh)
+                   sampler_backend=args.sampler_backend,
+                   depsum_backend=args.depsum_backend, mesh=mesh)
     print(res.summary())
     print(f"  fail: vmap={res.fail_vmap} delta={res.fail_delta} "
           f"order={res.fail_order} overflow={res.overflow}  "

@@ -1,0 +1,341 @@
+"""Contract linter + retrace sentinel tests.
+
+Structure:
+* a known-bad fixture corpus — every rule fires on its minimal trigger;
+* a clean corpus — the sanctioned idioms pass;
+* suppression mechanics — reasons accepted, bare suppressions are errors;
+* the acceptance criterion — the real ``src/`` tree lints clean;
+* a seeded retrace regression — ``no_retrace()`` catches a deliberate
+  shape-capture recompile and passes the warm path.
+"""
+from __future__ import annotations
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, lint_file, lint_paths
+from repro.analysis.lint import main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def corpus(tmp_path, rel, source):
+    """Write a fixture module under a scope-mimicking relative path."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return str(path)
+
+
+def rules_fired(path):
+    return {f.rule for f in lint_file(path)}
+
+
+# ---------------------------------------------------------------------------
+# bad corpus: every rule fires on its minimal trigger
+# ---------------------------------------------------------------------------
+def test_env_seam_fires_on_repro_read(tmp_path):
+    p = corpus(tmp_path, "repro/launch/bad_env.py", """
+        import os
+
+        def f():
+            return os.environ.get("REPRO_FOO", "1")
+    """)
+    assert "env-seam" in rules_fired(p)
+
+
+def test_env_seam_fires_on_environ_write(tmp_path):
+    p = corpus(tmp_path, "repro/launch/bad_env_write.py", """
+        import os
+
+        def f(backend):
+            os.environ["REPRO_SAMPLER_BACKEND"] = backend
+    """)
+    assert "env-seam" in rules_fired(p)
+
+
+def test_env_seam_fires_on_any_env_read_in_core(tmp_path):
+    # inside estimator layers even non-REPRO env access is banned
+    p = corpus(tmp_path, "repro/core/bad_env.py", """
+        import os
+
+        def f():
+            return os.getenv("HOME")
+    """)
+    assert "env-seam" in rules_fired(p)
+
+
+def test_env_seam_fires_on_getenv_alias(tmp_path):
+    p = corpus(tmp_path, "repro/launch/bad_getenv.py", """
+        from os import getenv
+
+        def f():
+            return getenv("REPRO_BAR")
+    """)
+    assert "env-seam" in rules_fired(p)
+
+
+def test_retrace_static_argnames_fires(tmp_path):
+    p = corpus(tmp_path, "repro/core/bad_static.py", """
+        import jax
+        import jax.numpy as jnp
+
+        def window(xs, n):
+            total = n * 2
+            return jnp.zeros((total,)) + xs.sum()
+
+        fn = jax.jit(window)
+    """)
+    findings = lint_file(p)
+    assert any(f.rule == "retrace-static-argnames" and "'n'" in f.message
+               for f in findings)
+
+
+def test_retrace_static_argnames_fires_on_range(tmp_path):
+    p = corpus(tmp_path, "repro/core/bad_range.py", """
+        import jax
+
+        @jax.jit
+        def scan(xs, depth):
+            acc = xs
+            for _ in range(depth):
+                acc = acc + xs
+            return acc
+    """)
+    assert "retrace-static-argnames" in rules_fired(p)
+
+
+def test_retrace_scalar_capture_fires(tmp_path):
+    p = corpus(tmp_path, "repro/core/bad_capture.py", """
+        import jax
+
+        def make(q):
+            qv = int(q)
+
+            def fn(x):
+                return x * qv
+            return jax.jit(fn)
+    """)
+    findings = lint_file(p)
+    assert any(f.rule == "retrace-scalar-capture" and "'qv'" in f.message
+               for f in findings)
+
+
+def test_det_key_origin_fires_on_seed_arithmetic(tmp_path):
+    p = corpus(tmp_path, "repro/core/bad_keys.py", """
+        import jax
+
+        def chunk_key(seed, j):
+            return jax.random.PRNGKey(seed + j)
+    """)
+    assert "det-key-origin" in rules_fired(p)
+
+
+def test_det_impure_in_traced_fires_on_wallclock(tmp_path):
+    p = corpus(tmp_path, "repro/stream/bad_clock.py", """
+        import time
+
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x + time.time()
+    """)
+    assert "det-impure-in-traced" in rules_fired(p)
+
+
+def test_det_impure_in_traced_fires_on_set_iteration(tmp_path):
+    p = corpus(tmp_path, "repro/core/bad_set.py", """
+        import jax
+
+        @jax.jit
+        def g(x):
+            for i in {3, 1, 2}:
+                x = x + i
+            return x
+    """)
+    assert "det-impure-in-traced" in rules_fired(p)
+
+
+def test_det_host_rng_fires(tmp_path):
+    p = corpus(tmp_path, "repro/core/bad_rng.py", """
+        import random
+
+        import numpy as np
+
+        def f():
+            a = random.random()
+            b = np.random.randint(10)
+            c = np.random.default_rng()
+            return a, b, c
+    """)
+    findings = [f for f in lint_file(p) if f.rule == "det-host-rng"]
+    assert len(findings) == 3   # import, global-state call, unseeded rng
+
+
+def test_exact_narrowing_cast_fires(tmp_path):
+    p = corpus(tmp_path, "repro/kernels/bad_cast.py", """
+        import jax.numpy as jnp
+
+        def pack(acc, w_own):
+            return acc.astype(jnp.float32) + jnp.asarray(w_own, jnp.int32)
+    """)
+    findings = [f for f in lint_file(p) if f.rule == "exact-narrowing-cast"]
+    assert len(findings) == 2
+
+
+# ---------------------------------------------------------------------------
+# clean corpus: sanctioned idioms pass
+# ---------------------------------------------------------------------------
+def test_clean_corpus_passes(tmp_path):
+    p = corpus(tmp_path, "repro/core/clean.py", """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        _F32_EXACT_MAX = float(2 ** 24)
+
+        def window(xs, n):
+            total = n * 2
+            return jnp.zeros((total,)) + xs.sum()
+
+        fn = jax.jit(window, static_argnames=("n",))
+
+        def chunk_key(seed, j):
+            return jax.random.fold_in(jax.random.PRNGKey(seed), j)
+
+        def host_rng(seed):
+            return np.random.default_rng(seed)
+
+        def narrow(acc):
+            # sound: module declares the 2^24 f32-exact envelope above
+            return acc.astype(jnp.float32)
+
+        @jax.jit
+        def traced_ok(x):
+            # shape access is static under trace, not a retrace hazard
+            return x + x.shape[0]
+    """)
+    assert lint_file(p) == []
+
+
+def test_registry_module_is_exempt(tmp_path):
+    p = corpus(tmp_path, "repro/knobs.py", """
+        import os
+
+        def get_knob(name):
+            return os.environ.get(name, "")
+    """)
+    assert lint_file(p) == []
+
+
+# ---------------------------------------------------------------------------
+# suppression mechanics
+# ---------------------------------------------------------------------------
+def test_suppression_with_reason_is_honored(tmp_path):
+    p = corpus(tmp_path, "repro/launch/sup.py", """
+        import os
+
+        def f():
+            # repro-lint: disable=env-seam(legacy shim, removed in PR 7)
+            return os.environ.get("REPRO_FOO")
+    """)
+    assert lint_file(p) == []
+
+
+def test_bare_suppression_is_an_error(tmp_path):
+    p = corpus(tmp_path, "repro/launch/sup_bare.py", """
+        import os
+
+        def f():
+            return os.environ.get("REPRO_FOO")  # repro-lint: disable=env-seam
+    """)
+    fired = rules_fired(p)
+    # the suppression is rejected AND the underlying finding survives
+    assert "suppression-missing-reason" in fired
+    assert "env-seam" in fired
+
+
+def test_unknown_rule_suppression_is_an_error(tmp_path):
+    p = corpus(tmp_path, "repro/launch/sup_unknown.py", """
+        x = 1  # repro-lint: disable=no-such-rule(whatever)
+    """)
+    assert rules_fired(p) == {"suppression-missing-reason"}
+
+
+def test_docstring_mention_is_not_a_suppression(tmp_path):
+    p = corpus(tmp_path, "repro/launch/doc.py", '''
+        """Docs may show the syntax: # repro-lint: disable=env-seam."""
+        x = 1
+    ''')
+    assert lint_file(p) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI + acceptance criterion
+# ---------------------------------------------------------------------------
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = corpus(tmp_path, "repro/core/bad_keys.py", """
+        import jax
+
+        def f(seed, j):
+            return jax.random.PRNGKey(seed * 31 + j)
+    """)
+    assert main([bad]) == 1
+    out = capsys.readouterr().out
+    assert "bad_keys.py:5:" in out and "det-key-origin" in out
+    clean = corpus(tmp_path, "repro/core/ok.py", "x = 1\n")
+    assert main([clean]) == 0
+    assert main(["--list-rules"]) == 0
+    assert main([str(tmp_path / "does_not_exist")]) == 2
+
+
+def test_src_tree_lints_clean():
+    """The acceptance criterion: zero findings (and zero suppressions
+    needed) across the real source tree."""
+    findings = lint_paths([str(REPO / "src")])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_all_rules_have_trigger_coverage():
+    """Every registered rule fires somewhere in this file's bad corpus."""
+    covered = {"env-seam", "retrace-static-argnames",
+               "retrace-scalar-capture", "det-key-origin",
+               "det-impure-in-traced", "det-host-rng",
+               "exact-narrowing-cast"}
+    assert covered == set(RULES)
+
+
+# ---------------------------------------------------------------------------
+# retrace sentinel (runtime half)
+# ---------------------------------------------------------------------------
+def test_sentinel_catches_shape_capture_retrace(no_retrace):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.analysis import RetraceError
+
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    f(jnp.ones(3))                      # cold compile, outside the region
+    with pytest.raises(RetraceError, match="recompiled"):
+        with no_retrace(watch=[f]):
+            f(jnp.ones(4))              # new shape -> deliberate retrace
+
+
+def test_sentinel_passes_warm_path(no_retrace):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    f(jnp.ones(3))
+    with no_retrace(watch=[f]) as probe:
+        f(jnp.ones(3))                  # warm re-hit: no compile
+    assert probe.new_keys == ()

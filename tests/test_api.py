@@ -147,14 +147,19 @@ def test_window_clock_resets_after_time_closed_flush(graph):
         assert h2.result().fused_jobs == 2     # h2+h3 fused in one plan
 
 
-def test_preprocess_cache_survives_across_windows(graph):
-    """A warm session re-serves (tree, delta) plans without re-preprocess."""
+def test_preprocess_cache_survives_across_windows(graph, no_retrace):
+    """A warm session re-serves (tree, delta) plans without re-preprocess
+    — and without recompiling the window program."""
     with Session(graph, _cfg()) as s:
         s.submit(Request("M5-3", DELTA, 512, seed=0)).result()
         calls = s.planner.preprocess_calls
         assert calls > 0
         s.submit(Request("M5-3", DELTA, 2048, seed=5)).result()
         assert s.planner.preprocess_calls == calls   # plan-cache hit
+        # same plan shape again: warm end to end, zero retraces
+        with no_retrace() as probe:
+            s.submit(Request("M5-3", DELTA, 512, seed=7)).result()
+        assert probe.dispatches > 0
 
 
 # ---------------------------------------------------------------------------

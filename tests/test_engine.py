@@ -75,7 +75,8 @@ JOBS_12 = [(mn, d, k)
            for k in (512, 1024, 2048)]
 
 
-def test_fused_bit_identical_and_one_dispatch_per_group_window(graph):
+def test_fused_bit_identical_and_one_dispatch_per_group_window(graph,
+                                                               no_retrace):
     """estimate_many == per-job estimate(), with the dispatch count of
     the fused plan, not of the per-job loop."""
     engine.STATS.reset()
@@ -102,6 +103,12 @@ def test_fused_bit_identical_and_one_dispatch_per_group_window(graph):
         assert rs.fused_jobs == 1
     # single-job plans dispatch exactly their own windows
     assert engine.STATS.dispatches == engine.STATS.job_windows == 12 * 7 // 3
+    # warm re-run: the full batch re-hits every compiled window program
+    with no_retrace() as probe:
+        batch2 = estimate_many(graph, JOBS_12, seed=0, chunk=CHUNK,
+                               checkpoint_every=CKPT_EVERY)
+    assert probe.dispatches == 4 * 4
+    assert [r.estimate for r in batch2] == [r.estimate for r in batch]
 
 
 def test_mesh_parity_in_process(graph):

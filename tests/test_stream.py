@@ -199,7 +199,7 @@ def test_epoch_determinism_contract(edges, backend):
         assert ss.stats.epochs == 3 and ss.stats.queries_run == 6
 
 
-def test_warm_epochs_reuse_compiled_programs(edges):
+def test_warm_epochs_reuse_compiled_programs(edges, no_retrace):
     """Steady-state epochs sharing buckets must NOT retrace the window
     program.  Epoch 0 is warm-up (its retained span — and thus its
     window-count bucket — differs from the horizon-limited steady
@@ -213,17 +213,13 @@ def test_warm_epochs_reuse_compiled_programs(edges):
         ss.advance()
         ss.ingest(src[B:2 * B], dst[B:2 * B], t[B:2 * B])
         er1 = ss.advance()
-        sizes = {k: f._cache_size() for k, f in engine._WINDOW_FN_LRU.items()
-                 if hasattr(f, "_cache_size")}
-        assert sizes, "no compiled window programs to observe"
+        assert engine._WINDOW_FN_LRU, "no compiled window programs to observe"
         ss.ingest(src[2 * B:], dst[2 * B:], t[2 * B:])
-        er2 = ss.advance()
+        with no_retrace() as probe:
+            er2 = ss.advance()
+        assert probe.dispatches > 0               # the epoch really ran
         assert er2.epoch.buckets == er1.epoch.buckets
         assert er2.epoch.evicted > 0              # horizon is active
-        for k, f in engine._WINDOW_FN_LRU.items():
-            if k in sizes and hasattr(f, "_cache_size"):
-                assert f._cache_size() == sizes[k], \
-                    f"window program retraced across epochs: {k}"
 
 
 # ---------------------------------------------------------------------------
