@@ -774,10 +774,152 @@ def stream_bench(fast: bool):
     print(f"# wrote {path}", flush=True)
 
 
+def resilience_bench(fast: bool):
+    """Cost of the resilience layer (repro.resilience).  Writes
+    BENCH_resilience.json.
+
+    * WAL replay vs cold rebuild — recovering a streaming store from its
+      write-ahead log (``StreamStore.recover``: replay ingest batches +
+      epoch manifests, NO snapshot materialization) vs rebuilding by
+      re-running the original command stream from upstream (every
+      ``advance`` re-materializes its snapshot — what a crash without a
+      WAL would cost, assuming the upstream even kept the edges);
+    * fault-free seam overhead — ``fire()`` ns/call with no injector
+      installed, and a warm ``estimate()`` with vs without a no-op
+      ``FaultInjector`` resident.  The retry/ladder/deadline machinery is
+      always on, so the "with" leg measures the whole resilient dispatch
+      path; the acceptance bar is ~zero overhead (< 5%).
+    """
+    import json
+    import os
+    import tempfile
+
+    from repro.core.estimator import estimate
+    from repro.core.motif import get_motif
+    from repro.graphs import powerlaw_temporal_graph
+    from repro.resilience import FaultInjector, FaultSpec
+    from repro.resilience.faultinject import fire
+    from repro.stream import StreamStore
+
+    # -- WAL replay vs cold rebuild --------------------------------------
+    rng = np.random.default_rng(0)
+    n_batches = 48 if fast else 160
+    bsz = 2_000
+    nv = 500
+    horizon = 200_000
+    advance_every = 8
+    batches = []
+    tbase = 0
+    for _ in range(n_batches):
+        s = rng.integers(0, nv, bsz)
+        d = (s + rng.integers(1, nv, bsz)) % nv
+        tt = np.sort(rng.integers(tbase, tbase + 10_000, bsz))
+        tbase += 5_000
+        batches.append((s, d, tt))
+
+    def drive(store):
+        for i, (s, d, tt) in enumerate(batches):
+            store.ingest(s, d, tt)
+            if (i + 1) % advance_every == 0:
+                store.advance()
+        return store
+
+    wal_path = os.path.join(tempfile.mkdtemp(prefix="bench_wal_"),
+                            "bench.wal")
+    logged = drive(StreamStore.recover(wal_path, horizon=horizon))
+    wal_mb = logged.wal.offset / 2 ** 20
+
+    t0 = time.perf_counter()
+    replayed = StreamStore.recover(wal_path, horizon=horizon)
+    t_replay = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rebuilt = drive(StreamStore(horizon=horizon))
+    t_rebuild = time.perf_counter() - t0
+
+    def fp(st):
+        return (st.epoch, st.buffered, st.retained, st.stats.ingested)
+
+    assert fp(replayed) == fp(logged) == fp(rebuilt), \
+        (fp(replayed), fp(logged), fp(rebuilt))
+    replay_speedup = t_rebuild / max(t_replay, 1e-9)
+    emit("resilience", "wal", "records", logged.wal.records)
+    emit("resilience", "wal", "wal_mb", f"{wal_mb:.2f}")
+    emit("resilience", "wal", "replay_s", f"{t_replay:.3f}")
+    emit("resilience", "wal", "cold_rebuild_s", f"{t_rebuild:.3f}")
+    emit("resilience", "wal", "replay_speedup", f"{replay_speedup:.2f}")
+
+    # -- fire() seam: ns/call with no injector ---------------------------
+    n_fire = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n_fire):
+        fire("engine.dispatch", tag="xla")
+    fire_ns = 1e9 * (time.perf_counter() - t0) / n_fire
+    emit("resilience", "seam", "fire_ns_per_call", f"{fire_ns:.0f}")
+
+    # -- warm estimate with vs without a resident no-op injector ---------
+    g = powerlaw_temporal_graph(n=300, m=4_000, time_span=60_000, seed=7)
+    m = get_motif("M5-3")
+    k = 1 << (12 if fast else 14)
+    chunk, ck = 1 << 10, 2
+    reps = 3 if fast else 6
+
+    def leg():
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            r = estimate(g, m, 3_000, k, seed=0, chunk=chunk,
+                         checkpoint_every=ck)
+        return (time.perf_counter() - t0) / reps, r
+
+    leg()                                         # warm both caches fully
+    t_bare, r_bare = leg()
+    with FaultInjector([FaultSpec("no.such.site", hits=None)]):
+        t_inj, r_inj = leg()
+    assert r_bare.estimate == r_inj.estimate      # injector changed nothing
+    overhead_pct = 100.0 * (t_inj - t_bare) / max(t_bare, 1e-9)
+    emit("resilience", "overhead", "warm_estimate_s", f"{t_bare:.4f}")
+    emit("resilience", "overhead", "warm_estimate_injected_s",
+         f"{t_inj:.4f}")
+    emit("resilience", "overhead", "fault_free_overhead_pct",
+         f"{overhead_pct:.2f}")
+
+    record = dict(
+        wal=dict(records=logged.wal.records, wal_mb=round(wal_mb, 2),
+                 n_batches=n_batches, batch_edges=bsz,
+                 advance_every=advance_every, horizon=horizon,
+                 replay_s=round(t_replay, 3),
+                 cold_rebuild_s=round(t_rebuild, 3),
+                 replay_speedup=round(replay_speedup, 2)),
+        seam=dict(fire_ns_per_call=round(fire_ns, 1)),
+        overhead=dict(warm_estimate_s=round(t_bare, 4),
+                      warm_estimate_injected_s=round(t_inj, 4),
+                      fault_free_overhead_pct=round(overhead_pct, 2),
+                      reps=reps, k=k),
+        methodology=("wal: one synthetic edge stream driven through a "
+                     "WAL-attached StreamStore (ingest batches + periodic "
+                     "advances); replay = StreamStore.recover on the "
+                     "resulting log (no snapshot materialization), cold "
+                     "rebuild = re-running the identical command stream "
+                     "with full epoch snapshots, both verified to land on "
+                     "the same store fingerprint.  overhead: warm "
+                     "estimate() reps with vs without a resident no-op "
+                     "FaultInjector (the retry/ladder/deadline path is "
+                     "always active; results bit-identical).  The "
+                     "overhead delta is noise-dominated at these "
+                     "runtimes — the acceptance bar is |overhead| small, "
+                     "not its sign."),
+    )
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_resilience.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
 BENCHES = dict(t3=t3_speed, t4=t4_accuracy, t5=t5_small, t6=t6_ablation,
                t7=t7_trees, f6=f6_sweep, perf=perf_micro, batch=batch_bench,
                sampler=sampler_bench, engine=engine_bench, serve=serve_bench,
-               stream=stream_bench)
+               stream=stream_bench, resilience=resilience_bench)
 
 
 def main() -> None:

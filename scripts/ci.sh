@@ -119,6 +119,75 @@ grep -q "epoch 2:" /tmp/ci_stream_replay.out || {
   echo "stream replay smoke FAILED"; exit 1; }
 echo "stream replay smoke OK"
 
+# crash-safe WAL: SIGKILL a real --serve --stream --wal process right after
+# an ingest is acknowledged, restart on the same WAL, and assert the
+# recovered epoch's standing-query estimate is bit-identical to an
+# uncrashed reference run (both sampler backends)
+rm -f /tmp/ci_wal_*.wal
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 580 python - <<'PYEOF'
+import json, os, signal, subprocess, sys
+
+CMD = [sys.executable, "-m", "repro.launch.estimate", "--serve", "--stream",
+       "--horizon", "12000", "--chunk", "256"]
+EDGES1 = [[i % 11, (i + 1) % 11, 120 * i] for i in range(150)]
+EDGES2 = [[(i + 3) % 11, i % 11, 18000 + 120 * i] for i in range(150)]
+SUB = {"cmd": "subscribe", "motif": "0-1,1-2", "delta": 2000, "k": 512}
+
+
+def start(wal, backend):
+    env = dict(os.environ, REPRO_SAMPLER_BACKEND=backend)
+    return subprocess.Popen(CMD + ["--wal", wal], stdin=subprocess.PIPE,
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.DEVNULL, text=True, env=env)
+
+
+def call(p, obj, n_replies=1):
+    p.stdin.write(json.dumps(obj) + "\n")
+    p.stdin.flush()
+    return [json.loads(p.stdout.readline()) for _ in range(n_replies)]
+
+
+for backend in ("xla", "pallas"):
+    ref_wal = f"/tmp/ci_wal_ref_{backend}.wal"
+    crash_wal = f"/tmp/ci_wal_crash_{backend}.wal"
+
+    # reference: the uncrashed run (subscribe -> ingest/advance x2)
+    p = start(ref_wal, backend)
+    assert call(p, SUB)[0]["ok"]
+    assert call(p, {"cmd": "ingest", "edges": EDGES1})[0]["ingested"] == 150
+    call(p, {"cmd": "advance"}, n_replies=2)
+    assert call(p, {"cmd": "ingest", "edges": EDGES2})[0]["ok"]
+    ref = call(p, {"cmd": "advance"}, n_replies=2)[0]
+    call(p, {"cmd": "quit"})
+    p.wait(timeout=60)
+    assert ref["ok"] and ref["epoch"] == 1, ref
+
+    # crash: SIGKILL right after the second ingest is ACKED -- the WAL
+    # fsyncs write-ahead, so the acknowledged batch must survive
+    p = start(crash_wal, backend)
+    assert call(p, SUB)[0]["ok"]
+    assert call(p, {"cmd": "ingest", "edges": EDGES1})[0]["ok"]
+    call(p, {"cmd": "advance"}, n_replies=2)
+    assert call(p, {"cmd": "ingest", "edges": EDGES2})[0]["ok"]
+    os.kill(p.pid, signal.SIGKILL)
+    p.wait(timeout=60)
+
+    # recovery: a fresh process on the same WAL replays to epoch 1 with
+    # the acked batch buffered; its next advance matches ref bit-for-bit
+    p = start(crash_wal, backend)
+    h = call(p, {"cmd": "health"})[0]
+    assert h["epoch"] == 1 and h["buffered"] == 150, h
+    assert h["resilience"]["wal_replayed"] == 3, h
+    assert call(p, SUB)[0]["ok"]
+    rec = call(p, {"cmd": "advance"}, n_replies=2)[0]
+    call(p, {"cmd": "quit"})
+    p.wait(timeout=60)
+    assert rec == ref, (rec, ref)        # the WHOLE response, bit for bit
+    assert rec["epoch"] == 1 and rec["estimate"] > 0, rec
+    print(f"wal SIGKILL smoke OK ({backend}): epoch={rec['epoch']} "
+          f"estimate={rec['estimate']}")
+PYEOF
+
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite batch --fast
@@ -130,4 +199,6 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python -m benchmarks.run --suite serve --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite stream --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite resilience --fast
 fi

@@ -22,6 +22,9 @@ ENV_SEAM_REGISTRY = "repro/knobs.py"
 # layers bound by the exactness/determinism contracts
 ESTIMATOR_SCOPES = ("repro/core/", "repro/kernels/")
 DETERMINISM_SCOPES = ESTIMATOR_SCOPES + ("repro/stream/",)
+# serving-stack layers where every swallowed exception must be
+# classified through the resilience taxonomy (rule resilience-bare-except)
+RESILIENCE_SCOPES = ("repro/api/", "repro/stream/", "repro/resilience/")
 EVERYWHERE = ("",)
 
 # pseudo-rule for malformed suppression comments; never suppressible

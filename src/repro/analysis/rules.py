@@ -16,7 +16,7 @@ import ast
 import re
 
 from .registry import (DETERMINISM_SCOPES, ENV_SEAM_REGISTRY,
-                       ESTIMATOR_SCOPES, register)
+                       ESTIMATOR_SCOPES, RESILIENCE_SCOPES, register)
 from .report import Finding
 
 
@@ -491,4 +491,69 @@ def check_narrowing_cast(mod) -> list:
                 "2^24 exactness guard: f32 holds integers exactly only "
                 "below 2^24 — gate via _F32_EXACT_MAX (and fall back to "
                 "the exact int64 path) before narrowing"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# family: resilience
+# ---------------------------------------------------------------------------
+_BROAD_EXC_NAMES = {"Exception", "BaseException"}
+_CLASSIFY_CALLS = {"classify", "error_payload", "is_retryable"}
+
+
+def _is_broad_exc(node: ast.AST | None) -> bool:
+    """Bare ``except:``, ``except Exception``/``BaseException`` (possibly
+    dotted or inside a tuple) — the handlers that can swallow anything."""
+    if node is None:
+        return True
+    if isinstance(node, ast.Tuple):
+        return any(_is_broad_exc(el) for el in node.elts)
+    if isinstance(node, ast.Name):
+        return node.id in _BROAD_EXC_NAMES
+    if isinstance(node, ast.Attribute):
+        return node.attr in _BROAD_EXC_NAMES
+    return False
+
+
+def _handler_classifies(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True                 # re-raised: nothing is swallowed
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = (fn.id if isinstance(fn, ast.Name)
+                    else fn.attr if isinstance(fn, ast.Attribute) else None)
+            if name in _CLASSIFY_CALLS:
+                return True
+    return False
+
+
+@register(
+    "resilience-bare-except", "resilience",
+    "a broad exception handler in the serving stack (api/, stream/, "
+    "resilience/) that neither re-raises nor routes the exception "
+    "through the resilience taxonomy (classify / error_payload / "
+    "is_retryable) silently erases the retryable-vs-fatal distinction: "
+    "transient device faults stop reaching the retry ladder and fatal "
+    "bugs get retried forever — every swallowed failure must be "
+    "classified or propagated.",
+    scope=RESILIENCE_SCOPES)
+def check_bare_except(mod) -> list:
+    out: list = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if not _is_broad_exc(node.type):
+            continue
+        if _handler_classifies(node):
+            continue
+        caught = "bare except" if node.type is None else \
+            f"except {ast.unparse(node.type)}"
+        out.append(_find(
+            "resilience-bare-except", mod, node,
+            f"{caught} swallows failures without consulting the "
+            "resilience taxonomy: call classify()/error_payload()/"
+            "is_retryable() on the exception (or re-raise) so "
+            "retryable faults reach the retry ladder and fatal ones "
+            "surface"))
     return out

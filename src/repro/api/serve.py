@@ -14,12 +14,18 @@ Request lines::
 
 ``motif`` accepts catalog names or inline edge-list specs (the
 ``core.motif`` DSL).  Optional fields: ``id`` (echoed back), ``seed``,
-``target_rse``/``k_max`` (adaptive budgets).  Unknown fields are
+``target_rse``/``k_max`` (adaptive budgets), ``deadline_ms`` (soft
+wall-clock budget: an expired request answers ``ok: true`` with
+``degraded: true``, the samples actually drawn as ``k`` and the
+achieved ``rse`` — a deadline is never an error).  Unknown fields are
 rejected (``checkpoint_path`` in particular stays CLI/library-only: a
 request line must not name server-side files to overwrite).
 
 Control lines: ``{"cmd": "stats"}`` (session counters), ``{"cmd":
-"quit"}`` (drain + exit; EOF does the same).
+"health"}`` (liveness probe, answered IMMEDIATELY without draining the
+coalescing window: mode, pending/served counts, process-wide resilience
+counters, and in stream mode the current epoch + WAL position),
+``{"cmd": "quit"}`` (drain + exit; EOF does the same).
 
 Streaming verbs (``--serve --stream``; ``serve_loop(..., stream=...)``)::
 
@@ -47,7 +53,11 @@ Responses (one line each, in request order within a window)::
      "sampler_backend": "xla", "fused_jobs": 2, "windows": 8}
 
 Malformed or failing requests answer ``{"id": ..., "ok": false,
-"error": "..."}`` and never kill the server.
+"error": "...", "error_kind": "retryable" | "fatal" | "bad_request"}``
+(the ``repro.resilience.errors`` taxonomy — clients branch on
+``error_kind``, never on message text) and never kill the server: a
+failed drain marks its window's handles failed, answers each with a
+structured error, and keeps serving.
 
 Coalescing: the loop blocks for the first request, then keeps reading
 until the session's coalescing window closes (``coalesce_window_s`` of
@@ -65,6 +75,8 @@ import sys
 import time
 from typing import IO
 
+from ..resilience import classify, error_payload, fire
+from ..resilience.retry import STATS as RSTATS
 from .session import Handle, Request, Session
 
 
@@ -121,17 +133,22 @@ class _LineSource:
 def _response(rid, handle: Handle) -> dict:
     res = handle.result()
     rse = handle.rse
-    return dict(
+    d = dict(
         id=rid, ok=True, estimate=res.estimate, W=res.W, k=res.k,
         valid=res.valid, rse=None if math.isinf(rse) else rse,
         motif=res.motif, delta=res.delta,
         sampler_backend=res.sampler_backend,
         fallback_reason=res.fallback_reason, fused_jobs=res.fused_jobs,
         windows=handle.windows)
+    if res.degraded:
+        d.update(degraded=True, degrade_reason=res.degrade_reason,
+                 k_done=res.k)
+    return d
 
 
 _REQUEST_FIELDS = frozenset(
-    ("id", "motif", "delta", "k", "seed", "target_rse", "k_max"))
+    ("id", "motif", "delta", "k", "seed", "target_rse", "k_max",
+     "deadline_ms"))
 
 
 def _parse_request(obj: dict) -> Request:
@@ -150,7 +167,9 @@ def _parse_request(obj: dict) -> Request:
         seed=None if obj.get("seed") is None else int(obj["seed"]),
         target_rse=(None if obj.get("target_rse") is None
                     else float(obj["target_rse"])),
-        k_max=None if obj.get("k_max") is None else int(obj["k_max"]))
+        k_max=None if obj.get("k_max") is None else int(obj["k_max"]),
+        deadline_s=(None if obj.get("deadline_ms") is None
+                    else float(obj["deadline_ms"]) / 1000.0))
 
 
 def _stats(session: Session | None, stream=None) -> dict:
@@ -168,6 +187,26 @@ def _stats(session: Session | None, stream=None) -> dict:
                  queries_run=ss.queries_run, ingested=st.ingested,
                  buffered=stream.store.buffered, evicted=st.evicted,
                  dropped=st.dropped, compactions=st.compactions)
+    return d
+
+
+def _health(stream, n_pending: int, served: int) -> dict:
+    """The ``health`` verb's payload: liveness + resilience counters.
+
+    Answered without draining — a probe must not force (or wait for)
+    estimation work — so it reflects the instant it was asked.
+    """
+    d = dict(ok=True, cmd="health",
+             mode="plain" if stream is None else "stream",
+             pending=n_pending, served=served,
+             resilience=RSTATS.as_dict())
+    if stream is not None:
+        st = stream.store
+        d.update(epoch=st.epoch, buffered=st.buffered)
+        wal = st.wal
+        if wal is not None:
+            d.update(wal=dict(path=wal.path, records=wal.records,
+                              offset=wal.offset))
     return d
 
 
@@ -219,11 +258,16 @@ def serve_loop(session: Session | None, infile: IO = None,
         return session if stream is None else stream.session
 
     def emit(obj: dict) -> None:
-        out.write(json.dumps(obj) + "\n")
         try:
+            fire("serve.write")
+            out.write(json.dumps(obj) + "\n")
             out.flush()
-        except Exception:
-            pass
+        except Exception as e:
+            # a client that hung up mid-response must not kill the
+            # server; the loss is counted and classified for health
+            RSTATS.emit_failures += 1
+            sys.stderr.write(f"serve: response write failed "
+                             f"({classify(e)}): {e}\n")
 
     def drain() -> None:
         nonlocal served
@@ -231,13 +275,16 @@ def serve_loop(session: Session | None, infile: IO = None,
         try:
             if s is not None:
                 s.flush()
-        except Exception:        # noqa: BLE001 — the server stays up; each
-            pass                 # failed handle answers ok:false below
+        except Exception as e:   # the server stays up; each failed
+            # handle answers ok:false below with the classified kind
+            RSTATS.drain_failures += 1
+            sys.stderr.write(f"serve: window drain failed "
+                             f"({classify(e)}): {e}\n")
         for rid, h in pending:
             try:
                 emit(_response(rid, h))
             except Exception as e:       # noqa: BLE001 — server stays up
-                emit(dict(id=rid, ok=False, error=f"{type(e).__name__}: {e}"))
+                emit(dict(id=rid, ok=False, **error_payload(e)))
             served += 1
         pending.clear()
 
@@ -248,8 +295,7 @@ def serve_loop(session: Session | None, infile: IO = None,
         try:
             er = stream.advance()
         except Exception as e:           # noqa: BLE001 — e.g. empty stream
-            emit(dict(ok=False, cmd="advance",
-                      error=f"{type(e).__name__}: {e}"))
+            emit(dict(ok=False, cmd="advance", **error_payload(e)))
             return
         for qid in sorted(er.results):
             emit(_sub_response(qid, stream.queries[qid], er.epoch.index,
@@ -297,6 +343,8 @@ def serve_loop(session: Session | None, infile: IO = None,
         elif cmd == "stats":
             drain()                     # deterministic ordering
             emit(_stats(cur_session(), stream))
+        elif cmd == "health":
+            emit(_health(stream, len(pending), served))
         elif cmd in ("ingest", "advance", "subscribe", "unsubscribe"):
             if stream is None:
                 emit(dict(ok=False, error=f"cmd {cmd!r} needs stream mode "
@@ -309,8 +357,7 @@ def serve_loop(session: Session | None, infile: IO = None,
                               dropped=len(esrc) - n_in,
                               buffered=stream.store.buffered))
                 except Exception as e:   # noqa: BLE001
-                    emit(dict(ok=False, cmd="ingest",
-                              error=f"{type(e).__name__}: {e}"))
+                    emit(dict(ok=False, cmd="ingest", **error_payload(e)))
             elif cmd == "advance":
                 do_advance()
             elif cmd == "subscribe":
@@ -334,7 +381,7 @@ def serve_loop(session: Session | None, infile: IO = None,
                               sub=stream.subscribe(q), name=q.label))
                 except Exception as e:   # noqa: BLE001
                     emit(dict(ok=False, cmd="subscribe",
-                              error=f"{type(e).__name__}: {e}"))
+                              **error_payload(e)))
             else:
                 try:
                     q = stream.unsubscribe(int(obj["sub"]))
@@ -342,7 +389,7 @@ def serve_loop(session: Session | None, infile: IO = None,
                               sub=int(obj["sub"]), name=q.label))
                 except Exception as e:   # noqa: BLE001
                     emit(dict(ok=False, cmd="unsubscribe",
-                              error=f"{type(e).__name__}: {e}"))
+                              **error_payload(e)))
         elif cmd is not None:
             emit(dict(ok=False, error=f"unknown cmd {cmd!r}"))
         else:
@@ -362,8 +409,7 @@ def serve_loop(session: Session | None, infile: IO = None,
                 if s.window_age() is None:          # count-closed mid-add
                     drain()
             except Exception as e:       # noqa: BLE001
-                emit(dict(id=rid, ok=False,
-                          error=f"{type(e).__name__}: {e}"))
+                emit(dict(id=rid, ok=False, **error_payload(e)))
     if pending:
         drain()
     return served

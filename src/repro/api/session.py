@@ -68,6 +68,12 @@ class Request:
     error meets the target or ``k_max`` (default
     ``config.k_max_factor * k``) is reached.
 
+    ``deadline_s`` is a soft wall-clock budget (seconds from submit):
+    when it expires mid-run the request stops at its last completed
+    checkpoint window and ``result()`` returns a partial marked
+    ``degraded=True`` with the achieved ``rse`` and the samples actually
+    drawn as ``k`` — graceful degradation, never an error.
+
     ``tree``/``wts`` are the advanced injection seam the ``estimate()``
     shim uses: a fixed spanning tree skips Alg. 7 selection, and
     precomputed ``Weights`` skip preprocessing entirely.
@@ -80,6 +86,7 @@ class Request:
     target_rse: float | None = None
     k_max: int | None = None
     checkpoint_path: str | None = None
+    deadline_s: float | None = None
     tree: SpanningTree | None = None
     wts: Weights | None = None
 
@@ -92,6 +99,9 @@ class Request:
             raise ValueError(f"target_rse must be > 0, got {self.target_rse}")
         if self.k_max is not None and self.k_max < self.k:
             raise ValueError(f"k_max ({self.k_max}) must be >= k ({self.k})")
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be > 0, got {self.deadline_s}")
 
 
 @dataclass(frozen=True)
@@ -139,6 +149,10 @@ class Handle:
         self._tree_select_s = 0.0
         self._k_total = int(request.k)
         self._resume: tuple[int, dict] | None = None
+        # absolute monotonic deadline, fixed at SUBMIT time (coalescing
+        # wait and fused siblings' work all count against it)
+        self._deadline_t = (None if request.deadline_s is None
+                            else time.monotonic() + request.deadline_s)
 
     # -- public surface --------------------------------------------------
     def result(self) -> EstimateResult:
@@ -386,7 +400,8 @@ class Session:
                 k=h._k_total,
                 seed=int(cfg.seed if req.seed is None else req.seed),
                 tree=h._tree, wts=h._wts,
-                checkpoint_path=req.checkpoint_path, resume=h._resume)
+                checkpoint_path=req.checkpoint_path, resume=h._resume,
+                deadline_t=h._deadline_t)
             job.tree_select_s = h._tree_select_s
             handles.append(h)
             jobs.append(job)
@@ -403,6 +418,12 @@ class Session:
         for h, job, res in zip(handles, jobs, results):
             res.rse = h._current_rse()
             h._result = res
+            if res.degraded:
+                # the engine stopped this job at its deadline — its
+                # partial is final; never grow a degraded request
+                h.done = True
+                self.stats.completed += 1
+                continue
             if self._needs_growth(h, job):
                 h._resume = (job.cursor, dict(job.acc))
                 h._k_total = min(h._k_cap(),
@@ -411,15 +432,30 @@ class Session:
                 self.stats.adaptive_rounds += 1
                 still_growing.append(h)
             else:
+                if (h.request.target_rse is not None
+                        and h._deadline_t is not None
+                        and h._current_rse() > h.request.target_rse
+                        and time.monotonic() >= h._deadline_t):
+                    # target unmet but the deadline vetoed further
+                    # growth rounds: report the partial as degraded
+                    res.degraded = True
+                    res.degrade_reason = (
+                        f"deadline: adaptive growth stopped at k={res.k} "
+                        f"with rse={res.rse:.4g} "
+                        f"(target {h.request.target_rse})")
                 h.done = True
                 self.stats.completed += 1
         return still_growing
 
     def _needs_growth(self, h: Handle, job) -> bool:
         """Grow iff the target RSE is unmet AND a larger budget can still
-        add whole new chunks under the cap."""
+        add whole new chunks under the cap AND the deadline (if any) has
+        not expired — a request out of time returns its partial instead
+        of starting another round."""
         target = h.request.target_rse
         if target is None or h._current_rse() <= target:
+            return False
+        if h._deadline_t is not None and time.monotonic() >= h._deadline_t:
             return False
         cap_chunks = max(1, -(-h._k_cap() // self.config.chunk))
         return job.cursor < cap_chunks

@@ -65,6 +65,9 @@ from dataclasses import dataclass, field
 from typing import Any
 
 from ..knobs import get_knob
+from ..resilience import STATS as RSTATS
+from ..resilience import atomic_write_json, classify, fire, is_retryable
+from ..resilience.retry import DISPATCH_POLICY, backoff_delay
 from ..util import ensure_x64
 
 ensure_x64()
@@ -229,9 +232,20 @@ class EngineJob:
     # round's cursor instead of re-reading (or needing) a checkpoint
     # file.  Takes precedence over ``checkpoint_path`` when set.
     resume: tuple | None = None
+    # absolute ``time.monotonic()`` deadline: when it passes mid-run the
+    # job stops at its last completed checkpoint window and returns a
+    # partial result marked ``degraded`` (never an error)
+    deadline_t: float | None = None
     # resolved by plan_jobs
     backend: str = "xla"
     fallback_reason: str = ""
+    degraded: bool = False
+    degrade_reason: str = ""
+    # runtime degradation ladder state: 0 = dispatch whole windows; a
+    # positive value caps the chunks per compiled dispatch (execution
+    # only — the chunk -> fold_in key map and the checkpoint grid are
+    # untouched, so halved windows stay bit-identical)
+    max_window: int = 0
     n_chunks: int = 0
     k_eff: int = 0
     cursor: int = 0
@@ -292,12 +306,23 @@ def _load_checkpoint(job: EngineJob, chunk: int) -> None:
     The format (and the match predicate) is exactly the sequential
     estimator's, and records nothing about the mesh — which is what makes
     resume bit-identical across mesh shapes.
+
+    A torn or corrupt checkpoint (a crash predating the atomic-write
+    path, or external truncation) is treated as absent: the job starts
+    fresh instead of poisoning the run.
     """
     path = job.checkpoint_path
     if not path or not os.path.exists(path):
         return
-    with open(path) as f:
-        st = json.load(f)
+    try:
+        with open(path) as f:
+            st = json.load(f)
+    except (OSError, ValueError):
+        return                      # torn/unreadable: start fresh
+    if not isinstance(st, dict) or not all(
+            kk in st for kk in ("motif", "delta", "seed", "chunk",
+                                "tree_edges", "chunks_done", "acc")):
+        return
     if (st["motif"] == job.motif.name and st["delta"] == job.delta
             and st["seed"] == job.seed and st["chunk"] == chunk
             and tuple(st["tree_edges"]) == job.tree.edge_ids
@@ -309,12 +334,13 @@ def _load_checkpoint(job: EngineJob, chunk: int) -> None:
 
 
 def _write_checkpoint(job: EngineJob, chunk: int) -> None:
-    tmp = job.checkpoint_path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(dict(motif=job.motif.name, delta=job.delta, seed=job.seed,
-                       chunk=chunk, tree_edges=list(job.tree.edge_ids),
-                       chunks_done=job.cursor, acc=job.acc), f)
-    os.replace(tmp, job.checkpoint_path)
+    # atomic (temp + os.replace, via the resilience layer): a crash mid-
+    # write leaves the previous complete checkpoint, never a torn one
+    atomic_write_json(
+        job.checkpoint_path,
+        dict(motif=job.motif.name, delta=job.delta, seed=job.seed,
+             chunk=chunk, tree_edges=list(job.tree.edge_ids),
+             chunks_done=job.cursor, acc=job.acc))
 
 
 def plan_jobs(jobs, *, dev: dict, chunk: int = 8192, Lmax: int = 16,
@@ -369,6 +395,112 @@ def plan_jobs(jobs, *, dev: dict, chunk: int = 8192, Lmax: int = 16,
                          checkpoint_every=max(1, int(checkpoint_every)))
 
 
+def _attempt_dispatch(window_fn, plan, wts, base_keys, j0, n, backend):
+    """One window dispatch with the transient-retry loop.
+
+    Retries ``classify() == retryable`` failures up to the policy's
+    attempt budget with deterministically-jittered backoff (the jitter
+    seed is the dispatch's own ``j0`` — replayable, yet distinct shards
+    de-synchronize).  Non-retryable failures and exhausted budgets raise
+    to the caller (the ladder).
+    """
+    last: Exception | None = None
+    for attempt in range(DISPATCH_POLICY.max_attempts):
+        try:
+            fire("engine.dispatch", tag=backend)
+            sums = window_fn(plan.dev, wts, base_keys, j0, n)
+            # materialize inside the try: device faults can surface here
+            return {kk: np.asarray(sums[kk]) for kk in _ACC_KEYS}
+        except Exception as e:
+            if not is_retryable(e):
+                raise
+            last = e
+            RSTATS.retries += 1
+            if attempt < DISPATCH_POLICY.max_attempts - 1:
+                time.sleep(backoff_delay(DISPATCH_POLICY, attempt,
+                                         seed=int(j0)))
+    assert last is not None
+    raise last
+
+
+def _run_cohort_window(plan, group, get_fn, cjobs, base_keys, j0, n):
+    """Dispatch one cohort window through the degradation ladder.
+
+    Rungs, taken only after the retry budget at the current rung is
+    exhausted on a *retryable* failure:
+
+    1. current backend, whole window;
+    2. ``pallas -> xla`` backend swap (only the cohort's jobs degrade —
+       fused siblings in other cohorts keep their backend);
+    3. dispatch-window halving: the ``checkpoint_every`` window is
+       sub-dispatched in spans of ``max_window`` chunks, host-summed
+       (exact int64).  Purely an execution change — chunk ``j`` still
+       draws ``fold_in(base_key, j)`` and the checkpoint grid is
+       untouched, so every rung stays bit-identical.
+
+    When the window cannot shrink further the last error raises (fatal).
+    Returns ``(sums, n_dispatches)`` and records the rung taken on the
+    cohort's jobs (``backend`` / ``max_window`` / ``fallback_reason``).
+    """
+    backend = cjobs[0].backend
+    max_window = cjobs[0].max_window
+    while True:
+        try:
+            window_fn = get_fn(backend)
+            if not max_window or max_window >= n:
+                return _attempt_dispatch(window_fn, plan, group.wts,
+                                         base_keys, j0, n, backend), 1
+            total: dict | None = None
+            parts = 0
+            done = 0
+            while done < n:
+                step = min(max_window, n - done)
+                part = _attempt_dispatch(window_fn, plan, group.wts,
+                                         base_keys, j0 + done, step, backend)
+                parts += 1
+                total = part if total is None else {
+                    kk: total[kk] + part[kk] for kk in _ACC_KEYS}
+                done += step
+            return total, parts
+        except Exception as e:
+            if not is_retryable(e):
+                raise
+            if backend == "pallas":
+                backend = "xla"
+                reason = "ladder: pallas -> xla after repeated transient " \
+                         "dispatch failure"
+            else:
+                cur = max_window if max_window and max_window < n else n
+                if cur <= 1:
+                    raise           # smallest dispatch still failing
+                max_window = cur // 2
+                reason = f"ladder: dispatch window halved to {max_window} " \
+                         "chunks after repeated transient failure"
+            RSTATS.ladder_steps += 1
+            for job in cjobs:
+                job.backend = backend
+                job.max_window = max_window
+                job.fallback_reason = (job.fallback_reason + "; " + reason
+                                       if job.fallback_reason else reason)
+
+
+def _mark_deadline_expired(jobs, chunk) -> list:
+    """Split off jobs whose deadline has passed; they stop at their last
+    completed checkpoint window (cursor stays put).  Returns survivors."""
+    now = time.monotonic()
+    live = []
+    for job in jobs:
+        if job.deadline_t is not None and now >= job.deadline_t:
+            job.degraded = True
+            job.degrade_reason = (
+                f"deadline: stopped at k={job.cursor * chunk} "
+                f"of {job.k_eff} (last completed checkpoint window)")
+            RSTATS.deadline_degraded += 1
+        else:
+            live.append(job)
+    return live
+
+
 def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
     """Execute a plan: one dispatch per (job-cohort, window); results in
     input job order, bit-identical to sequential ``estimate()``.
@@ -389,30 +521,50 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
     costs far more than the padded lanes, which replay the lead job's
     keys and have their sums discarded).  Fused jobs report the shared
     dispatch wall-clock as their ``sampling_s``.
+
+    Resilience (see ``repro.resilience``): every dispatch runs through a
+    transient-retry loop and, on persistent failure, the per-cohort
+    degradation ladder (``_run_cohort_window``) — degraded jobs record
+    the rung in ``fallback_reason`` and keep bit-identical results.
+    Jobs whose ``deadline_t`` passes stop at their last completed
+    checkpoint window and return partials marked ``degraded`` with the
+    samples actually drawn as ``k`` (never an error).
     """
     ce = plan.checkpoint_every
     for group in plan.groups:
-        window_fn = cached_window_fn(group.key.tree, group.key.chunk,
-                                     Lmax=group.key.Lmax,
-                                     backend=group.key.backend,
-                                     mesh=plan.mesh)
+        fns = {}
+
+        def get_fn(backend, _group=group):
+            fn = fns.get(backend)
+            if fn is None:
+                fire("sampler.call", tag=backend)
+                fn = cached_window_fn(_group.key.tree, _group.key.chunk,
+                                      Lmax=_group.key.Lmax, backend=backend,
+                                      mesh=plan.mesh)
+                fns[backend] = fn
+            return fn
+
         active = [j for j in group.jobs if j.cursor < j.n_chunks]
         while active:
+            active = _mark_deadline_expired(active, plan.chunk)
             cohorts: OrderedDict = OrderedDict()
             for job in active:
                 j0 = job.cursor
                 n = min(ce - j0 % ce, job.n_chunks - j0)
-                cohorts.setdefault((j0, n), []).append(job)
-            for (j0, n), cjobs in cohorts.items():
+                # runtime-degraded jobs peel into their own cohorts so
+                # fused siblings never inherit their rung
+                cohorts.setdefault((j0, n, job.backend, job.max_window),
+                                   []).append(job)
+            for (j0, n, _, _), cjobs in cohorts.items():
                 pad = len(group.jobs) - len(cjobs)
                 base_keys = jnp.stack([j.base_key for j in cjobs]
                                       + [cjobs[0].base_key] * pad)
                 t0 = time.perf_counter()
-                sums = window_fn(plan.dev, group.wts, base_keys, j0, n)
-                sums = {kk: np.asarray(sums[kk]) for kk in _ACC_KEYS}
+                sums, n_disp = _run_cohort_window(plan, group, get_fn,
+                                                  cjobs, base_keys, j0, n)
                 dt = time.perf_counter() - t0
-                plan.dispatches += 1
-                STATS.dispatches += 1
+                plan.dispatches += n_disp
+                STATS.dispatches += n_disp
                 STATS.job_windows += len(cjobs)
                 if len(cjobs) > 1:
                     STATS.fused_dispatches += 1
@@ -431,9 +583,14 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
     results = []
     for job in sorted(plan.jobs, key=lambda j: j.index):
         W = int(job.wts.W_total)
+        # a deadline-degraded job answers for the samples it drew; its
+        # partial is bit-identical to a clean run with budget k_done
+        # (same fold_in keys, exact int64 sums)
+        k_done = job.cursor * plan.chunk if job.degraded else job.k_eff
+        est = W * job.acc["cnt2"] / (2.0 * k_done) if k_done else 0.0
         results.append(EstimateResult(
-            estimate=W * job.acc["cnt2"] / (2.0 * job.k_eff),
-            W=W, k=job.k_eff, valid=job.acc["valid"],
+            estimate=est,
+            W=W, k=k_done, valid=job.acc["valid"],
             fail_vmap=job.acc["fail_vmap"], fail_delta=job.acc["fail_delta"],
             fail_order=job.acc["fail_order"], overflow=job.acc["overflow"],
             cnt2_sum=job.acc["cnt2"], motif=job.motif.name,
@@ -441,5 +598,6 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
             preprocess_s=job.preprocess_s, sampling_s=job.sampling_s,
             tree_select_s=job.tree_select_s, sampler_backend=job.backend,
             fallback_reason=job.fallback_reason,
-            mesh_shape=plan.mesh_shape, fused_jobs=job.group_size))
+            mesh_shape=plan.mesh_shape, fused_jobs=job.group_size,
+            degraded=job.degraded, degrade_reason=job.degrade_reason))
     return results

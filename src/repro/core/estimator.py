@@ -87,6 +87,10 @@ class EstimateResult:
     # empirical batch-means relative standard error, filled by the
     # session layer (api/session.py); None when no session measured it
     rse: float | None = None
+    # deadline partials: the job stopped at its last completed checkpoint
+    # window, ``k`` reports the samples actually drawn (never an error)
+    degraded: bool = False
+    degrade_reason: str = ""
 
     @property
     def valid_rate(self) -> float:

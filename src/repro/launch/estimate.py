@@ -147,6 +147,11 @@ def main() -> None:
                     help="stream replay: edges per ingest batch")
     ap.add_argument("--advance-every", type=int, default=1,
                     help="stream replay: ingest batches per epoch advance")
+    ap.add_argument("--wal", default=None, metavar="PATH",
+                    help="with --serve --stream: crash-safe write-ahead "
+                         "log; ingest/advance history is fsynced to PATH "
+                         "and replayed on restart (torn tail truncated) "
+                         "so a killed server resumes bit-identically")
     args = ap.parse_args()
     if args.stream and not args.serve:
         ap.error("--stream requires --serve (for offline replay use "
@@ -154,6 +159,9 @@ def main() -> None:
     if args.horizon is not None and not (args.stream or args.stream_replay):
         ap.error("--horizon only applies to stream modes (--serve --stream "
                  "or --stream-replay)")
+    if args.wal is not None and not (args.serve and args.stream):
+        ap.error("--wal requires --serve --stream (the WAL logs the live "
+                 "ingest/advance history)")
     if args.devices:
         from .mesh import force_host_device_count
         force_host_device_count(args.devices)
@@ -173,9 +181,19 @@ def main() -> None:
                              coalesce_max_requests=args.coalesce_max,
                              sampler_backend=args.sampler_backend,
                              depsum_backend=args.depsum_backend)
-        with StreamingSession(config=cfg, horizon=args.horizon,
-                              mesh=mesh) as ss:
+        if args.wal is not None:
+            from ..stream import StreamStore
+            store = StreamStore.recover(args.wal, horizon=args.horizon)
+            print(f"WAL {args.wal}: recovered epoch={store.epoch} "
+                  f"buffered={store.buffered} "
+                  f"ingested={store.stats.ingested}",
+                  file=sys.stderr, flush=True)
+            ss_kw = dict(store=store)
+        else:
+            ss_kw = dict(horizon=args.horizon)
+        with StreamingSession(config=cfg, mesh=mesh, **ss_kw) as ss:
             print(f"serving LIVE stream  horizon={args.horizon}  "
+                  f"wal={args.wal}  "
                   f"mesh={mesh.shape if mesh is not None else None}",
                   file=sys.stderr, flush=True)
             served = serve_loop(None, stream=ss)

@@ -1,0 +1,53 @@
+"""Resilience layer: error taxonomy, retry ladders, fault injection.
+
+The serving stack (engine dispatch, stream WAL, NDJSON serve loop) must
+survive faults instead of merely being fast when nothing goes wrong.
+This package is the shared, dependency-free (stdlib-only) substrate the
+other layers thread through:
+
+``errors``
+    The failure taxonomy — :func:`classify` maps any exception to
+    ``"retryable"`` / ``"fatal"`` / ``"bad_request"``; marker classes
+    (:class:`TransientError` etc.) let call sites pre-classify; and
+    :func:`error_payload` is the ONE wire encoding of a failure (the
+    serve loop's ``{"error": ..., "error_kind": ...}``).
+
+``retry``
+    Capped exponential backoff with *deterministic* jitter
+    (splitmix64 of the caller's seed — never wall-clock or host RNG),
+    the frozen :class:`RetryPolicy`, and the process-wide
+    :data:`STATS` counters the ``health`` verb reports.
+
+``faultinject``
+    A deterministic fault-injection harness: named ``fire()`` sites
+    (``engine.dispatch``, ``sampler.call``, ``wal.fsync``,
+    ``serve.write``, ``checkpoint.write``) are no-ops in production;
+    tests install a :class:`FaultInjector` whose hit schedule comes
+    from an explicit seed/plan, so every chaos run is replayable.
+
+``atomic``
+    Crash-safe file writes (temp file + ``os.replace``) with an
+    injection point mid-write, used by the engine's checkpoints.
+
+Layering: this package imports ONLY the stdlib — the engine, stream,
+api and train layers all import it without cycles.  The degradation
+ladders built on top (engine: pallas -> xla -> dispatch-window halving;
+session: deadline -> partial-at-last-window) are execution-only and
+preserve the bit-identity contract: chunk ``j`` always draws
+``fold_in(base_key, j)`` and resumes from ``(chunks_done, acc)``.
+"""
+from .atomic import atomic_write_json
+from .errors import (BAD_REQUEST, FATAL, RETRYABLE, BadRequestError,
+                     FatalError, TransientError, classify, error_payload,
+                     is_retryable)
+from .faultinject import FaultInjector, FaultSpec, fire, seeded_hits
+from .retry import STATS, ResilienceStats, RetryPolicy, backoff_delays
+
+__all__ = [
+    "BAD_REQUEST", "FATAL", "RETRYABLE",
+    "BadRequestError", "FatalError", "TransientError",
+    "classify", "error_payload", "is_retryable",
+    "FaultInjector", "FaultSpec", "fire", "seeded_hits",
+    "STATS", "ResilienceStats", "RetryPolicy", "backoff_delays",
+    "atomic_write_json",
+]

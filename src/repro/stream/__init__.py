@@ -31,6 +31,12 @@ Pieces
 ``replay_edge_list`` / ``replay_epochs`` (stream/replay.py)
     Feed recorded edge-list files (text / .gz / .npz) through the store
     in bounded batches — the CLI's ``--stream-replay``.
+``Wal`` (stream/wal.py)
+    Checksummed, length-prefixed write-ahead log: ingest batches are
+    durable before the tail mutates, advances append epoch manifests,
+    and ``StreamStore.recover(path)`` replays the valid prefix (torn
+    tail truncated) so a SIGKILLed server resumes bit-identically —
+    the CLI's ``--serve --stream --wal PATH``.
 
 Why padded snapshots are the tentpole: jax specializes compiled programs
 on array *shapes*, so naively re-materializing a snapshot per epoch
@@ -53,8 +59,10 @@ from .replay import replay_edge_list, replay_epochs
 from .session import (EpochResult, StandingQuery, StreamingSession,
                       StreamStats)
 from .store import Epoch, StoreStats, StreamStore
+from .wal import Wal
 
 __all__ = [
     "Epoch", "EpochResult", "StandingQuery", "StoreStats", "StreamStats",
-    "StreamStore", "StreamingSession", "replay_edge_list", "replay_epochs",
+    "StreamStore", "StreamingSession", "Wal", "replay_edge_list",
+    "replay_epochs",
 ]

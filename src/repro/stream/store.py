@@ -26,9 +26,17 @@ many tiny buckets while the stream warms up.
 Determinism: an epoch's snapshot is a pure function of the multiset of
 retained edges — ingest batching, segment boundaries and compaction
 order cannot change it (``from_edges`` fully re-sorts and dedups).
+
+Durability: an optional write-ahead log (``stream/wal.py``) makes the
+store crash-safe.  Every accepted ``ingest()`` batch is logged (fsynced)
+*before* the tail mutates and every completed ``advance()`` appends an
+epoch manifest; :meth:`StreamStore.recover` rebuilds a store from the
+log's valid prefix (truncating a torn tail) such that its next
+``advance()`` is bit-identical to the uncrashed store's.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 
@@ -85,11 +93,17 @@ class StreamStore:
     ``pad=False`` disables snapshot padding — every epoch then presents
     its natural shapes and jax retraces per advance (the cold baseline
     the stream benchmark compares against).
+
+    ``wal`` names a write-ahead log file: accepted ingest batches are
+    logged before the tail mutates, completed advances append an epoch
+    manifest, and :meth:`recover` rebuilds from it after a crash.  Use
+    ``recover`` (not the constructor) for a path that may hold history.
     """
 
     def __init__(self, horizon: int | None = None, *, pad: bool = True,
                  max_segments: int = 8, min_m_bucket: int = 1024,
-                 min_n_bucket: int = 64, min_p_bucket: int = 256):
+                 min_n_bucket: int = 64, min_p_bucket: int = 256,
+                 wal: str | None = None):
         if horizon is not None and horizon < 0:
             raise ValueError(f"horizon must be >= 0, got {horizon}")
         self.horizon = horizon
@@ -104,6 +118,49 @@ class StreamStore:
         self._segments: list[_Segment] = []
         self._t_max: int | None = None      # newest timestamp ever seen
         self._epoch = 0
+        self._wal = None
+        if wal is not None:
+            from .wal import Wal
+            self._wal = Wal(wal)
+
+    @property
+    def wal(self):
+        """The attached :class:`repro.stream.wal.Wal`, or None."""
+        return self._wal
+
+    @classmethod
+    def recover(cls, path: str, **kw) -> "StreamStore":
+        """Rebuild a store from WAL ``path`` and keep logging to it.
+
+        Replays the log's valid record prefix — ingest batches refill
+        the tiers, advance manifests re-run compaction/eviction and bump
+        the epoch counter (no snapshot is materialized during replay) —
+        after TRUNCATING any torn tail a crash left behind.  Because an
+        epoch snapshot is a pure function of the retained edge multiset,
+        the recovered store's next ``advance()`` is bit-identical to the
+        uncrashed store's.  A missing or empty file yields a fresh store
+        with a new WAL at ``path``.  ``**kw`` are constructor arguments
+        (``horizon=...`` etc.).
+        """
+        from ..resilience.retry import STATS as RSTATS
+        from .wal import Wal, read_records
+
+        records, good = read_records(path)
+        if os.path.exists(path) and os.path.getsize(path) > good:
+            with open(path, "r+b") as f:
+                f.truncate(good)            # discard the torn tail
+        store = cls(**kw)                   # no WAL yet: replay must not
+        for kind, payload in records:       # re-log its own records
+            if kind == "ingest":
+                src, dst, t = payload
+                store.ingest(src, dst, t)
+            else:                           # advance manifest
+                store.compact()
+                store._epoch += 1
+                store.stats.epochs += 1
+        RSTATS.wal_replayed += len(records)
+        store._wal = Wal(path)              # append past the valid prefix
+        return store
 
     # -- ingestion -------------------------------------------------------
     def ingest(self, src, dst, t) -> int:
@@ -126,6 +183,10 @@ class StreamStore:
             self.stats.dropped += dropped
         if src.size == 0:
             return 0
+        if self._wal is not None:
+            # write-ahead: the FILTERED batch is durable before the tail
+            # mutates, so an acknowledged ingest survives any crash
+            self._wal.append_ingest(src, dst, t)
         self._tail.append((src, dst, t))
         self._tail_len += src.size
         tmax = int(t.max())
@@ -212,4 +273,9 @@ class StreamStore:
             snapshot_s=time.perf_counter() - t0)
         self._epoch += 1
         self.stats.epochs += 1
+        if self._wal is not None:
+            # logged AFTER the snapshot exists (at-least-once): a crash
+            # in between re-runs a pure function of the same retained
+            # multiset on recovery — bit-identical either way
+            self._wal.append_advance(epoch.index)
         return epoch

@@ -18,6 +18,12 @@ Two layers of the story (both exercised by tests):
    RNG as ``fold_in(base_key, j)``, so *who* executes it never changes the
    estimate — duplicated completions from straggler re-issues are
    idempotent (first result wins).
+
+"Is this failure worth retrying" is NOT decided here: both layers defer
+to :func:`repro.resilience.errors.classify` — the same taxonomy the
+engine's retry ladder and the serve loop use — so a fault the serving
+stack treats as fatal is never burned through training retries either
+(cross-layer parity is pinned by tests/test_train.py).
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..resilience import classify, is_retryable
 from . import checkpoint as ckpt
 
 
@@ -47,8 +54,11 @@ def run_resumable(step_fn: Callable, state: Any, next_batch: Callable,
     """Run ``total_steps`` of ``state = step_fn(state, batch, step)``.
 
     * resumes from the latest complete checkpoint in ``ckpt_dir``;
-    * retries a raising step with a fresh batch (bounded), then skips it
-      (skip-and-log) so one poisoned batch cannot wedge the job;
+    * retries a raising step with a fresh batch (bounded) IF the
+      failure classifies as transient (``resilience.errors.classify``
+      — the same taxonomy the engine's retry ladder uses), then skips
+      it (skip-and-log) so one poisoned batch cannot wedge the job;
+      non-retryable failures skip immediately without burning retries;
     * ``fail_injector(step, attempt)`` raising is the test hook.
     """
     report = RunReport()
@@ -69,7 +79,9 @@ def run_resumable(step_fn: Callable, state: Any, next_batch: Callable,
                 report.metrics.append(metrics)
                 done = True
                 break
-            except Exception:
+            except Exception as e:
+                if not is_retryable(e):
+                    break       # fatal/bad input: skip, don't retry
                 report.retries += 1
         if not done:
             report.failures_skipped += 1  # skip-and-log
@@ -92,6 +104,8 @@ class WorkUnit:
     result: Any = None
     done: bool = False
     issues: int = 0
+    failures: int = 0       # retryable faults reported against this unit
+    fatal: str = ""         # first fatal error message (unit abandoned)
 
 
 class WorkQueue:
@@ -112,7 +126,7 @@ class WorkQueue:
         """Lease the next available unit (unleased, expired, or undone)."""
         now = self.clock()
         for u in self.units:
-            if u.done:
+            if u.done or u.fatal:
                 continue
             if u.lease_worker is None or u.lease_expiry <= now:
                 u.lease_worker = worker
@@ -130,9 +144,31 @@ class WorkQueue:
         u.done = True
         return True
 
+    def fail(self, unit_id: int, exc: BaseException) -> str:
+        """A worker reports its leased unit failed; returns the kind.
+
+        Retryable failures release the lease immediately so the unit
+        re-issues to the next ``acquire`` (no waiting out the deadline);
+        anything else marks the unit fatally failed — it stops
+        re-issuing, and ``results()`` raises naming it.  The decision is
+        ``resilience.errors.classify``, the same taxonomy every other
+        layer uses.
+        """
+        u = self.units[unit_id]
+        kind = classify(exc)
+        if u.done:
+            return kind                 # a sibling already finished it
+        if is_retryable(exc):
+            u.failures += 1
+            u.lease_worker = None       # eligible for immediate re-issue
+            u.lease_expiry = 0.0
+        elif not u.fatal:
+            u.fatal = f"{type(exc).__name__}: {exc}"
+        return kind
+
     @property
     def all_done(self) -> bool:
-        return all(u.done for u in self.units)
+        return all(u.done or u.fatal for u in self.units)
 
     @property
     def reissues(self) -> int:
@@ -141,7 +177,16 @@ class WorkQueue:
     def results(self) -> list:
         if not self.all_done:
             raise RuntimeError("queue not drained")
+        dead = [u for u in self.units if u.fatal]
+        if dead:
+            raise RuntimeError(
+                f"{len(dead)} unit(s) failed fatally; first: "
+                f"unit {dead[0].unit_id}: {dead[0].fatal}")
         return [u.result for u in self.units]
+
+    @property
+    def retryable_failures(self) -> int:
+        return sum(u.failures for u in self.units)
 
 
 def run_estimation_distributed(worker_fn: Callable[[int], Any],

@@ -186,6 +186,63 @@ def test_exact_narrowing_cast_fires(tmp_path):
     assert len(findings) == 2
 
 
+def test_resilience_bare_except_fires(tmp_path):
+    p = corpus(tmp_path, "repro/api/bad_except.py", """
+        def drain(session, out):
+            try:
+                session.flush()
+            except Exception:
+                pass
+            try:
+                out.flush()
+            except:
+                out = None
+            try:
+                out.write("x")
+            except (Exception, OSError) as e:
+                print(e)
+    """)
+    findings = [f for f in lint_file(p)
+                if f.rule == "resilience-bare-except"]
+    assert len(findings) == 3
+
+
+def test_resilience_bare_except_scoped_and_clean_idioms(tmp_path):
+    # classified, re-raised, and narrow handlers all pass
+    p = corpus(tmp_path, "repro/stream/ok_except.py", """
+        from repro.resilience import classify, error_payload
+
+        def emit(out, obj, log):
+            try:
+                out.write(obj)
+            except Exception as e:
+                log(error_payload(e))
+            try:
+                out.flush()
+            except Exception as e:
+                log(classify(e))
+            try:
+                out.close()
+            except Exception:
+                raise
+            try:
+                return out.fileno()
+            except (OSError, ValueError):
+                return None
+    """)
+    assert lint_file(p) == []
+    # the rule polices ONLY the serving stack: the same swallow
+    # elsewhere (e.g. launch/) is out of scope
+    q = corpus(tmp_path, "repro/launch/unscoped.py", """
+        def f(x):
+            try:
+                return int(x)
+            except Exception:
+                pass
+    """)
+    assert "resilience-bare-except" not in rules_fired(q)
+
+
 # ---------------------------------------------------------------------------
 # clean corpus: sanctioned idioms pass
 # ---------------------------------------------------------------------------
@@ -304,7 +361,7 @@ def test_all_rules_have_trigger_coverage():
     covered = {"env-seam", "retrace-static-argnames",
                "retrace-scalar-capture", "det-key-origin",
                "det-impure-in-traced", "det-host-rng",
-               "exact-narrowing-cast"}
+               "exact-narrowing-cast", "resilience-bare-except"}
     assert covered == set(RULES)
 
 

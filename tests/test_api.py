@@ -334,7 +334,9 @@ def test_serve_loop_rejects_unknown_fields(graph):
 def test_drain_failure_marks_window_mates_and_session_survives(graph,
                                                                tmp_path):
     """An execution failure mid-drain fails every handle of the window
-    with the cause (no bare assert), and the session keeps serving."""
+    with the cause (no bare assert), and the session keeps serving.
+    Through the serve loop the same failure answers each request with a
+    structured ``error_kind`` and the SERVER also stays up."""
     s = Session(graph, _cfg())
     good = s.submit(Request("M5-3", DELTA, 512, seed=0))
     bad = s.submit(Request("M5-3", DELTA, 512, seed=1,
@@ -348,6 +350,33 @@ def test_drain_failure_marks_window_mates_and_session_survives(graph,
     # the session itself is still healthy
     r = s.submit(Request("M5-3", DELTA, 1024, seed=0)).result()
     assert r.cnt2_sum == GOLDEN[("M5-3", DELTA, 1024, 0)]["cnt2"]
+
+    # serve-loop level: a fatally failing first drain answers ok:false
+    # with the taxonomy kind, then the SAME server process answers the
+    # next request (and a health probe) normally
+    from repro.resilience import FatalError, FaultInjector, FaultSpec
+    from repro.resilience.retry import STATS as RSTATS
+    lines = [json.dumps(dict(id=1, motif="M5-3", delta=DELTA, k=512)),
+             json.dumps(dict(cmd="health")),    # answered WITHOUT draining
+             json.dumps(dict(cmd="stats")),     # forces the failing drain
+             json.dumps(dict(id=2, motif="M5-3", delta=DELTA, k=1024)),
+             json.dumps(dict(cmd="quit"))]
+    out = io.StringIO()
+    drain_failures0 = RSTATS.drain_failures
+    with FaultInjector([FaultSpec("engine.dispatch", hits=(0,),
+                                  exc=FatalError)]):
+        served = serve_loop(s, io.StringIO("\n".join(lines) + "\n"), out)
+    resp = [json.loads(ln) for ln in out.getvalue().splitlines()]
+    by_id = {r["id"]: r for r in resp if "id" in r}
+    assert served == 2
+    assert not by_id[1]["ok"] and by_id[1]["error_kind"] == "fatal"
+    assert by_id[2]["ok"]
+    assert by_id[2]["valid"] == GOLDEN[("M5-3", DELTA, 1024, 0)]["valid"]
+    health = next(r for r in resp if r.get("cmd") == "health")
+    assert health["ok"] and health["mode"] == "plain"
+    assert health["pending"] == 1           # probed mid-window, no drain
+    assert "resilience" in health
+    assert RSTATS.drain_failures == drain_failures0 + 1
     s.close()
 
 

@@ -163,7 +163,7 @@ def test_run_resumable_retries_then_skips(tmp_path):
     def injector(step, attempt):
         calls.append((step, attempt))
         if step == 2:
-            raise RuntimeError("poisoned batch")
+            raise TimeoutError("flaky link")     # transient -> retried
 
     state, rep = run_resumable(step_fn, {"x": 0.0},
                                lambda s, a: 0.0, 4, str(tmp_path),
@@ -172,6 +172,77 @@ def test_run_resumable_retries_then_skips(tmp_path):
     assert rep.retries == 3          # step 2: 3 failed attempts
     assert rep.failures_skipped == 1
     assert rep.steps_run == 4
+
+
+def test_run_resumable_fatal_skips_without_retrying(tmp_path):
+    attempts = []
+
+    def injector(step, attempt):
+        attempts.append((step, attempt))
+        if step == 1:
+            raise RuntimeError("logic bug")      # fatal -> no retries
+
+    state, rep = run_resumable(lambda s, b, i: (s, {}), {"x": 0.0},
+                               lambda s, a: 0.0, 3, str(tmp_path),
+                               ckpt_every=100, max_retries=2,
+                               fail_injector=injector)
+    assert rep.retries == 0
+    assert rep.failures_skipped == 1
+    assert rep.steps_run == 3
+    assert (1, 1) not in attempts    # step 1 was never re-attempted
+
+
+def test_transient_classification_parity_across_layers(tmp_path):
+    """One taxonomy everywhere: what the training driver retries is
+    exactly what resilience.errors calls retryable (and what the
+    engine's dispatch ladder would retry) — the classification can
+    never drift between layers."""
+    from repro.resilience import (BadRequestError, FatalError,
+                                  TransientError, classify, is_retryable)
+
+    battery = [
+        (TimeoutError("t"), "retryable"),
+        (ConnectionError("c"), "retryable"),
+        (MemoryError("m"), "retryable"),
+        (TransientError("marked"), "retryable"),
+        (RuntimeError("bug"), "fatal"),
+        (FatalError("hard"), "fatal"),
+        (AssertionError("a"), "fatal"),
+        (ValueError("v"), "bad_request"),
+        (BadRequestError("b"), "bad_request"),
+    ]
+    for exc, kind in battery:
+        assert classify(exc) == kind, exc
+
+        # training driver: retried iff retryable
+        def injector(step, attempt, _exc=exc):
+            if step == 0:
+                raise _exc
+        d = str(tmp_path / f"{type(exc).__name__}_{kind}")
+        _, rep = run_resumable(lambda s, b, i: (s, {}), {}, lambda s, a: 0,
+                               1, d, max_retries=2, fail_injector=injector)
+        assert rep.failures_skipped == 1
+        assert (rep.retries > 0) == is_retryable(exc), exc
+
+        # work queue: same decision drives lease release vs abandonment
+        q = WorkQueue(1, lease_s=100.0)
+        assert q.acquire(0) == 0
+        assert q.fail(0, exc) == kind
+        if is_retryable(exc):
+            assert q.acquire(1) == 0     # re-issued immediately
+        else:
+            assert q.acquire(1) is None  # abandoned
+            assert not q.all_done or q.units[0].fatal
+            with pytest.raises(RuntimeError, match="fatally"):
+                q.results()
+
+
+def test_workqueue_fail_after_completion_is_noop():
+    q = WorkQueue(1, lease_s=100.0)
+    q.acquire(0)
+    q.complete(0, 42)
+    q.fail(0, TimeoutError("late straggler error"))
+    assert q.results() == [42]
 
 
 def test_workqueue_straggler_reissue():
