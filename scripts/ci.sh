@@ -99,6 +99,50 @@ assert by_cmd["quit"][0]["served"] == 2
 print("stream serve smoke OK")
 '
 
+# tree-cohort sharing: 3 standing queries whose motifs all plan onto the
+# wedge 0-1,1-2 spanning tree must fuse into ONE cohort dispatch per
+# advance window (shared sample stream, one count lane per motif) —
+# pinned through the stats/health "engine" block (engine.STATS)
+python - <<'PYEOF' > /tmp/ci_cohort_input.ndjson
+import json
+lines = [
+    {"cmd": "subscribe", "motif": "0-1,1-2", "delta": 2000, "k": 512},
+    {"cmd": "subscribe", "motif": "0-1,1-2,1-2", "delta": 2000, "k": 512},
+    {"cmd": "subscribe", "motif": "0-1,1-2,1-2,1-2", "delta": 2000,
+     "k": 512},
+    {"cmd": "ingest",
+     "edges": [[i % 11, (i + 1) % 11, 120 * i] for i in range(150)]},
+    {"cmd": "advance"},
+    {"cmd": "ingest",
+     "edges": [[(i + 3) % 11, i % 11, 18000 + 120 * i] for i in range(150)]},
+    {"cmd": "advance"},
+    {"cmd": "stats"},
+    {"cmd": "quit"},
+]
+print("\n".join(json.dumps(o) for o in lines))
+PYEOF
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.estimate --serve --stream --horizon 12000 \
+      --chunk 256 < /tmp/ci_cohort_input.ndjson \
+  | PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -c '
+import json, sys
+rs = [json.loads(ln) for ln in sys.stdin if ln.strip()]
+subs = [r for r in rs if "sub" in r and "estimate" in r]
+assert len(subs) == 6 and all(r["ok"] for r in subs), subs
+assert subs[0]["estimate"] > 0, subs[0]   # the shared stream counts
+eng = next(r for r in rs if r.get("cmd") == "stats")["engine"]
+# one cohort dispatch per advance window: 2 advances x (3 queries, 1
+# shared tree) -> 2 dispatches covering 6 job-windows, 512 samples
+# drawn per window and consumed twice more without redrawing
+assert eng["dispatches"] == 2, eng
+assert eng["tree_cohorts"] == 2, eng
+assert eng["fused_dispatches"] == 2, eng
+assert eng["job_windows"] == 6, eng
+assert eng["motifs_per_cohort"] == 3.0, eng
+assert eng["samples_shared"] == 2 * 2 * 512, eng
+print("tree-cohort serve smoke OK")
+'
+
 # stream replay: the CLI replays a recorded (gzipped) edge list through
 # the store, advancing epochs with standing queries
 python - <<'PYEOF'
@@ -199,6 +243,8 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python -m benchmarks.run --suite serve --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite stream --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite multimotif --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite resilience --fast
 fi

@@ -334,6 +334,49 @@ def check_key_origin(mod) -> list:
     return out
 
 
+def _motif_laneish(arg: ast.AST) -> str | None:
+    """Name/attribute under ``arg`` that smells like a motif/lane index."""
+    for n in ast.walk(arg):
+        ident = None
+        if isinstance(n, ast.Name):
+            ident = n.id
+        elif isinstance(n, ast.Attribute):
+            ident = n.attr
+        if ident is not None and re.search(r"motif|lane", ident,
+                                           re.IGNORECASE):
+            return ident
+    return None
+
+
+@register(
+    "det-cohort-key", "determinism",
+    "a tree-cohort's sample stream is SHARED by every member motif: its "
+    "keys derive from (seed, chunk) alone.  Folding a motif/lane index "
+    "into a sampling key would give each motif a private stream, "
+    "breaking the cohort bit-identity contract (a motif's estimate must "
+    "not depend on which other motifs joined its cohort).",
+    scope=DETERMINISM_SCOPES)
+def check_cohort_key(mod) -> list:
+    out: list = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "fold_in"):
+            continue
+        for arg in node.args:
+            ident = _motif_laneish(arg)
+            if ident is not None:
+                out.append(_find(
+                    "det-cohort-key", mod, node,
+                    f"fold_in over {ident!r}: cohort sampling keys derive "
+                    "from (seed, chunk) only — folding a motif/lane index "
+                    "in gives that motif a private sample stream, so its "
+                    "estimate changes with cohort membership (shared-"
+                    "stream determinism contract)"))
+                break
+    return out
+
+
 _WALLCLOCK = {("time", "time"), ("time", "time_ns"), ("time", "monotonic"),
               ("time", "perf_counter")}
 

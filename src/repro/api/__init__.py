@@ -41,14 +41,42 @@ Quick start
         res = h4.result()
         print(res.k, h4.rse)
 
+Multi-motif shared sampling (tree-cohorts)
+------------------------------------------
+Queries whose chosen spanning trees share a *structural signature*
+(``core.spanning_tree.tree_signature``) fuse further: the engine draws
+ONE tree-instance sample stream for the whole cohort and scores every
+member motif's own count lane against it (the odeN pattern), so N
+standing queries on one tree cost ~one sampling pass instead of N.
+Wedge-family motifs do this naturally — all of these extend ``0-1,1-2``
+and (graph permitting) plan onto its two-edge tree::
+
+    with Session(g, EstimateConfig(chunk=8192)) as s:
+        hs = s.submit_many([
+            Request("0-1,1-2",         delta=50_000, k=1 << 16),
+            Request("0-1,1-2,1-0",     delta=50_000, k=1 << 16),
+            Request("0-1,1-2,1-2,1-2", delta=50_000, k=1 << 16),
+        ])
+        for h in hs:
+            print(h.result().summary())
+        from repro.core.engine import STATS
+        print(STATS.motifs_per_cohort, STATS.samples_shared)
+
+Each estimate stays bit-identical to its solo run (the shared stream's
+keys derive from ``(seed, chunk)`` alone — lint rule
+``det-cohort-key``); to PIN a cohort rather than rely on per-graph
+min-W selection, pass the same rooted structure explicitly via
+``Request(tree=..., wts=...)`` (see benchmarks/run.py multimotif).
+
 Key objects
 -----------
 ``EstimateConfig`` (api/config.py)
     One frozen config instead of per-call kwargs; ``REPRO_*`` env
     defaults are resolved exactly once, at session construction.
 ``Session`` (api/session.py)
-    Owns the device upload, the ``(tree, delta, wd, use_c2, backend)``
-    preprocess cache, the engine plan/LRU state and an optional mesh
+    Owns the device upload, the ``(tree_signature, delta, wd, use_c2,
+    backend)`` preprocess cache, the engine plan/LRU state and an
+    optional mesh
     (pass ``mesh=launch.mesh.make_estimator_mesh()`` to shard every
     window's chunk range over the mesh's data axes).
 ``Request`` / ``Handle`` / ``Progress``

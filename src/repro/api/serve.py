@@ -21,11 +21,15 @@ achieved ``rse`` — a deadline is never an error).  Unknown fields are
 rejected (``checkpoint_path`` in particular stays CLI/library-only: a
 request line must not name server-side files to overwrite).
 
-Control lines: ``{"cmd": "stats"}`` (session counters), ``{"cmd":
+Control lines: ``{"cmd": "stats"}`` (session counters plus an
+``engine`` block of process-wide tree-cohort counters — ``dispatches``,
+``tree_cohorts``, ``motifs_per_cohort``, ``samples_shared`` — showing
+how much sample-stream sharing the standing queries achieve), ``{"cmd":
 "health"}`` (liveness probe, answered IMMEDIATELY without draining the
 coalescing window: mode, pending/served counts, process-wide resilience
-counters, and in stream mode the current epoch + WAL position),
-``{"cmd": "quit"}`` (drain + exit; EOF does the same).
+counters, the same ``engine`` block, and in stream mode the current
+epoch + WAL position), ``{"cmd": "quit"}`` (drain + exit; EOF does the
+same).
 
 Streaming verbs (``--serve --stream``; ``serve_loop(..., stream=...)``)::
 
@@ -172,6 +176,23 @@ def _parse_request(obj: dict) -> Request:
                     else float(obj["deadline_ms"]) / 1000.0))
 
 
+def _engine_stats() -> dict:
+    """Process-wide ``engine.STATS`` as a wire dict (tree-cohort fan-out).
+
+    ``motifs_per_cohort`` > 1.0 means standing queries are sharing
+    sample streams (one tree-instance draw scoring several motifs);
+    ``samples_shared`` counts the samples that were consumed by a job
+    without being redrawn for it.
+    """
+    from ..core.engine import STATS as ESTATS
+    return dict(dispatches=ESTATS.dispatches,
+                fused_dispatches=ESTATS.fused_dispatches,
+                job_windows=ESTATS.job_windows,
+                tree_cohorts=ESTATS.tree_cohorts,
+                motifs_per_cohort=round(ESTATS.motifs_per_cohort, 3),
+                samples_shared=ESTATS.samples_shared)
+
+
 def _stats(session: Session | None, stream=None) -> dict:
     d = dict(ok=True, cmd="stats")
     if session is not None:
@@ -187,6 +208,7 @@ def _stats(session: Session | None, stream=None) -> dict:
                  queries_run=ss.queries_run, ingested=st.ingested,
                  buffered=stream.store.buffered, evicted=st.evicted,
                  dropped=st.dropped, compactions=st.compactions)
+    d.update(engine=_engine_stats())
     return d
 
 
@@ -199,7 +221,8 @@ def _health(stream, n_pending: int, served: int) -> dict:
     d = dict(ok=True, cmd="health",
              mode="plain" if stream is None else "stream",
              pending=n_pending, served=served,
-             resilience=RSTATS.as_dict())
+             resilience=RSTATS.as_dict(),
+             engine=_engine_stats())
     if stream is not None:
         st = stream.store
         d.update(epoch=st.epoch, buffered=st.buffered)

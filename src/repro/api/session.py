@@ -5,8 +5,9 @@ A :class:`Session` owns everything that is expensive to rebuild between
 requests over one temporal graph:
 
 * the device upload (``g.device_arrays()``, shared by every request);
-* the ``(tree, delta, wd, use_c2, backend)`` preprocess cache (a
-  ``core.batch.BatchPlanner``);
+* the ``(tree_signature, delta, wd, use_c2, backend)`` preprocess cache
+  (a ``core.batch.BatchPlanner`` — structurally-equal trees of
+  *different motifs* share one ``Weights`` object);
 * the engine's compiled-window-program LRU and an optional mesh.
 
 ``submit(Request) -> Handle`` enqueues a request into the current
@@ -14,16 +15,19 @@ requests over one temporal graph:
 ``core.engine.plan_jobs``/``run_plan`` — when it has been open
 ``config.coalesce_window_s`` seconds, when ``coalesce_max_requests`` are
 pending, or when any handle's ``result()``/``stream()`` forces a flush.
-Requests draining together that share a plan key ``(tree, chunk, Lmax,
-backend)`` + weights FUSE into one vmapped dispatch per window, exactly
-like ``estimate_many`` jobs.
+Requests draining together that share a plan key ``(tree_signature,
+chunk, Lmax, backend)`` + weights FUSE into one **tree-cohort**: ONE
+tree-instance sample stream per deduped ``(seed, chunk)``, scored by
+every member motif's own count lane in one vmapped dispatch per window
+(the odeN multi-motif path) — N standing queries on one tree cost ~one
+sampling pass instead of N.
 
 Determinism contract (inherited from the engine): chunk ``j`` of a
 request always draws from ``fold_in(PRNGKey(seed), j)`` — never a
-function of which submit window, fused cohort, adaptive round or mesh
-shard executed it — so a coalesced/adaptive/sharded result is
-bit-identical to a solo ``estimate()`` with the same seed and final
-budget.
+function of which submit window, fused cohort, cohort lane, adaptive
+round or mesh shard executed it — so a coalesced/adaptive/sharded
+result is bit-identical to a solo ``estimate()`` with the same seed and
+final budget, regardless of which other motifs joined its cohort.
 
 Adaptive budgets: a request with ``target_rse`` starts at its ``k`` and
 grows the budget geometrically (``config.rse_growth``) until the

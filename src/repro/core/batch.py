@@ -8,14 +8,16 @@ re-compiles its sampler.  ``estimate_many()`` amortizes all three:
 
 * one ``device_arrays()`` upload serves every job;
 * the tree-candidate/preprocess pass is deduplicated through a
-  ``(tree, delta, wd, use_c2, backend)`` cache — jobs that resolve to the
-  same key (same motif+delta, or distinct motifs sharing a spanning tree)
-  preprocess once;
+  ``(tree_signature, delta, wd, use_c2, backend)`` cache — jobs that
+  resolve to the same key (same motif+delta, or distinct motifs whose
+  trees share a structural signature) preprocess once and share ONE
+  ``Weights`` object;
 * sampling runs through the execution engine (core/engine.py): jobs
-  sharing a (tree, chunk, Lmax, backend, weights) plan key FUSE — their
-  base keys stack and one vmapped window program covers all of them per
-  dispatch — and each window's chunk range shards over the ``mesh``'s
-  data axes when one is passed.
+  sharing a (tree-signature, chunk, Lmax, backend, weights) plan key
+  FUSE into a tree-cohort — one shared tree-instance sample stream per
+  (seed, chunk), scored against every member motif's own count fn in a
+  single vmapped window program per dispatch — and each window's chunk
+  range shards over the ``mesh``'s data axes when one is passed.
 
 Per-job outputs are **bit-identical** to ``estimate(g, motif, delta, k,
 seed=seed)``: the same candidate ranking picks the same tree, and chunk
@@ -30,7 +32,7 @@ from typing import Iterable, Sequence
 from .estimator import EstimateResult
 from .graph import TemporalGraph
 from .motif import TemporalMotif, get_motif
-from .spanning_tree import SpanningTree, candidate_trees
+from .spanning_tree import SpanningTree, candidate_trees, tree_signature
 from .weights import Weights, depsum_backend, preprocess
 
 
@@ -62,8 +64,9 @@ class BatchPlanner:
     ``plan(motif, delta)`` mirrors ``estimator.choose_tree`` (same
     candidate order, same strict min-W ranking — so the winning tree is
     identical to the sequential path) but routes every candidate's
-    ``preprocess`` through a cache keyed on ``(tree, delta, wd, use_c2,
-    backend)``.
+    ``preprocess`` through a cache keyed on ``(tree_signature, delta,
+    wd, use_c2, backend)`` — structurally-equal trees of different
+    motifs share one Weights object (bit-identical DP output).
     """
 
     def __init__(self, g: TemporalGraph, dev: dict | None = None,
@@ -86,7 +89,13 @@ class BatchPlanner:
         return int(delta) if self.use_c3 else int(self.g.time_span) + 1
 
     def weights_for(self, tree: SpanningTree, delta: int) -> Weights:
-        key = (tree, int(delta), self._wd(delta), self.use_c2, self.backend)
+        # keyed on the STRUCTURAL signature, not the tree object: the
+        # weight DP reads only signature fields, so trees of *different
+        # motifs* sharing a signature resolve to one Weights object —
+        # which is exactly the identity the engine's tree-cohort
+        # grouping keys on (shared object => shared sample stream)
+        key = (tree_signature(tree), int(delta), self._wd(delta),
+               self.use_c2, self.backend)
         hit = key in self._weights
         if hit:
             self.preprocess_hits += 1

@@ -11,30 +11,49 @@ Alg. 6/7): chunk ``j`` of a job is a pure function of
 workloads (odeN-style multi-motif serving) run MANY such jobs over one
 graph, and the wins live in aggregating their dispatches:
 
-* **Cross-job fusion** — jobs sharing a compiled window program are
-  stacked on a leading job axis: their folded base keys become one
-  ``[J, 2]`` array and ``jax.vmap`` runs ONE program over all J jobs'
-  chunks (``core.sampler.make_batched_sample_fn`` + a vmapped count fn).
+* **Tree-cohort fusion (shared-sample multi-motif)** — jobs whose trees
+  share a *structural signature* (``spanning_tree.tree_signature``) are
+  grouped into one cohort: the tree-instance stream is drawn ONCE per
+  distinct (seed) stream — base keys stack into ``[J_streams, 2]`` and
+  ``core.sampler.make_batched_sample_fn`` runs over the cohort's LEAD
+  tree — and every member motif scores each sample through its own
+  count fn on a second ``[M_lanes]`` axis
+  (``core.sampler.make_cohort_count_fn``).  N standing queries on one
+  tree cost ~1 sampling pass instead of N (the odeN-style fan-out win).
 * **Mesh sharding** — the chunk range of each window is ``shard_map``-ed
   over the mesh's data axes (``dist.sharding.data_axes``): shard ``d`` of
   ``D`` executes chunk offsets ``d, d + D, d + 2D, ...`` (round-robin by
   the static stride ``D``) and one ``jax.lax.psum`` combines the int64
   accumulator dicts.
 
-A ``checkpoint_every`` window of J fused jobs on D devices is therefore
-ONE dispatch instead of J x window host round-trips.
+A ``checkpoint_every`` window of a J-stream/M-lane cohort on D devices
+is therefore ONE dispatch instead of (J x M) x window host round-trips.
 
 The plan key
 ------------
-Jobs fuse when they share ``(tree, chunk, Lmax, backend)`` *and* the same
-``Weights`` object (same preprocess output — jobs differing only in
-``k``/``seed``).  The compiled window program is memoized in a bounded
-LRU keyed on the full plan key ``(tree, chunk, Lmax, backend, mesh)`` —
-distinct graphs/Lmax variants age out instead of accumulating forever
-(the old module-global ``_WINDOW_FN_CACHE``).  ``backend`` is resolved
-PER JOB before grouping: a ``pallas_sampler_eligible`` veto downgrades
-only that job to "xla" (recorded as ``EstimateResult.fallback_reason``)
-and the group splits, instead of dragging every fused sibling down.
+Jobs fuse when they share ``(tree_signature, chunk, Lmax, backend)``
+*and* the same ``Weights`` object (same preprocess output — the batch
+planner keys its cache on the signature too, so distinct motifs whose
+trees are structurally equal share one Weights object and land in one
+cohort; jobs differing only in ``k``/``seed`` fuse as before).  Within
+a group, distinct trees become *lanes* (one count fn each) and distinct
+seeds become *streams* (one sample row each); job (seed, tree) reads
+cell ``[stream, lane]`` of the window sums.  The compiled window
+program is memoized in a bounded LRU keyed on the full plan key
+``(lane trees, chunk, Lmax, backend, mesh)`` — distinct graphs/Lmax
+variants age out instead of accumulating forever.  ``backend`` is
+resolved PER JOB before grouping: a ``pallas_sampler_eligible`` veto
+downgrades only that job to "xla" (recorded as
+``EstimateResult.fallback_reason``) and the group splits, instead of
+dragging every fused sibling down.
+
+Sharing is sound because the samplers (both backends) and the weight DP
+read only signature fields — never ``edge_ids`` or non-tree edges — so
+signature-equal trees induce bit-identical Alg. 3 instance streams,
+while validation/DeriveCnt stay lane-local: each motif's accept/reject
+derives from the shared sample and its own spec alone.  The per-motif
+unbiasing correction is each lane's own ``W``/``cnt2`` in
+``estimator.unbias_estimate``.
 
 Determinism contract
 --------------------
@@ -42,7 +61,11 @@ Results are **bit-identical** to sequential ``estimate()`` on ANY mesh
 shape, fused or not:
 
 * chunk ``j`` always draws from ``fold_in(base_key, j)`` — the chunk ->
-  key map never depends on which shard executes it or on the job axis;
+  key map never depends on which shard executes it, on the job axis, or
+  on the motif lane (a cohort's stream must never fold a motif index
+  into a sampling key — lint rule ``det-cohort-key``), so a job's
+  results are bit-identical regardless of which other motifs joined its
+  cohort;
 * accumulators are exact int64 sums of per-chunk int64 scalars, and
   integer addition is associative + commutative, so the shard-local scan
   order and the psum combine order cannot change the total;
@@ -80,40 +103,51 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from ..dist.collectives import folded_axis_index  # noqa: E402
 from ..dist.sharding import data_axes, n_data  # noqa: E402
 from ..util import get_shard_map  # noqa: E402
-from .estimator import _ACC_KEYS, EstimateResult  # noqa: E402
+from .estimator import _ACC_KEYS, EstimateResult, unbias_estimate  # noqa: E402
 from .motif import TemporalMotif  # noqa: E402
-from .sampler import make_batched_sample_fn  # noqa: E402
+from .sampler import make_batched_sample_fn, make_cohort_count_fn  # noqa: E402
 from .sampler import sampler_backend as _resolve_backend  # noqa: E402
-from .spanning_tree import SpanningTree  # noqa: E402
-from .validate import make_count_fn  # noqa: E402
+from .spanning_tree import SpanningTree, tree_signature  # noqa: E402
 from .weights import Weights  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
 # compiled window programs: fused over jobs, sharded over chunks
 # ---------------------------------------------------------------------------
-def make_engine_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
-                          backend: str | None = None, mesh=None):
-    """``fn(dev, wts, base_keys, j0, n) -> {key: [J] int64}``: chunks
-    ``j0 .. j0+n-1`` of J fused jobs in ONE dispatch.
+def _as_lanes(trees) -> tuple:
+    """Normalize a single tree or an iterable of lane trees to a tuple."""
+    if isinstance(trees, SpanningTree):
+        return (trees,)
+    return tuple(trees)
 
-    ``base_keys [J, 2]`` stacks the jobs' PRNG base keys; chunk ``j`` of
-    job ``i`` draws from ``fold_in(base_keys[i], j)`` exactly as the
-    sequential path does.  ``n`` is static (one compile per distinct
-    window length); ``j0`` is traced, so resuming mid-stream never
-    recompiles.  With a ``mesh``, the body runs under ``shard_map`` over
-    the data axes: shard ``d`` scans offsets ``d + i*D`` (static stride
-    round-robin), masks offsets past ``n``, and a ``psum`` combines the
-    exact int64 accumulators.
+
+def make_engine_window_fn(trees, chunk: int, Lmax: int = 16,
+                          backend: str | None = None, mesh=None):
+    """``fn(dev, wts, base_keys, j0, n) -> {key: [J, M] int64}``: chunks
+    ``j0 .. j0+n-1`` of a J-stream, M-lane tree-cohort in ONE dispatch.
+
+    ``trees`` is one ``SpanningTree`` or a tuple of signature-equal lane
+    trees (one per member motif; the lead tree drives sampling).
+    ``base_keys [J, 2]`` stacks the cohort's distinct seed streams;
+    chunk ``j`` of stream ``i`` draws from ``fold_in(base_keys[i], j)``
+    exactly as the sequential path does — never from a lane index — and
+    every lane's count fn scores the SAME ``[J]`` sample batch
+    (``make_cohort_count_fn``), so cell ``[i, l]`` is bit-identical to a
+    solo run of lane ``l``'s motif at stream ``i``'s seed.  ``n`` is
+    static (one compile per distinct window length); ``j0`` is traced,
+    so resuming mid-stream never recompiles.  With a ``mesh``, the body
+    runs under ``shard_map`` over the data axes: shard ``d`` scans
+    offsets ``d + i*D`` (static stride round-robin), masks offsets past
+    ``n``, and a ``psum`` combines the exact int64 accumulators.
     """
-    bs_fn = make_batched_sample_fn(tree, chunk, backend=backend)
-    bc_fn = jax.vmap(make_count_fn(tree, chunk, Lmax=Lmax),
-                     in_axes=(None, None, 0))
+    lanes = _as_lanes(trees)
+    bs_fn = make_batched_sample_fn(lanes[0], chunk, backend=backend)
+    cc_fn = make_cohort_count_fn(lanes, chunk, Lmax=Lmax, keys=_ACC_KEYS)
+    M = len(lanes)
 
     def chunk_sums(dev, wts, base_keys, j):
         keys = jax.vmap(lambda bk: jax.random.fold_in(bk, j))(base_keys)
-        out = bc_fn(dev, wts, bs_fn(dev, wts, keys))
-        return {k: out[k].sum(axis=1).astype(jnp.int64) for k in _ACC_KEYS}
+        return cc_fn(dev, wts, bs_fn(dev, wts, keys))
 
     if mesh is not None and (not data_axes(mesh)
                              or n_data(mesh) != mesh.size):
@@ -130,7 +164,7 @@ def make_engine_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
                 out = chunk_sums(dev, wts, base_keys, j)
                 return {k: acc[k] + out[k] for k in _ACC_KEYS}, None
 
-            acc0 = {k: jnp.zeros((base_keys.shape[0],), jnp.int64)
+            acc0 = {k: jnp.zeros((base_keys.shape[0], M), jnp.int64)
                     for k in _ACC_KEYS}
             acc, _ = jax.lax.scan(step, acc0, j0 + jnp.arange(n))
             return acc
@@ -152,7 +186,7 @@ def make_engine_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
                 live = (off < n).astype(jnp.int64)
                 return {k: acc[k] + out[k] * live for k in _ACC_KEYS}, None
 
-            acc0 = {k: jnp.zeros((base_keys.shape[0],), jnp.int64)
+            acc0 = {k: jnp.zeros((base_keys.shape[0], M), jnp.int64)
                     for k in _ACC_KEYS}
             acc, _ = jax.lax.scan(step, acc0, jnp.arange(slots))
             return jax.lax.psum(acc, axes)
@@ -175,20 +209,22 @@ def _cache_capacity() -> int:
     return max(1, get_knob("REPRO_ENGINE_CACHE"))
 
 
-def cached_window_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
+def cached_window_fn(trees, chunk: int, Lmax: int = 16,
                      backend: str | None = None, mesh=None):
     """LRU-memoized ``make_engine_window_fn`` keyed on the FULL plan key
-    ``(tree, chunk, Lmax, backend, mesh)``.
+    ``(lane trees, chunk, Lmax, backend, mesh)`` — ``trees`` is a single
+    tree or the cohort's lane-tree tuple.
 
     Bounded at ``REPRO_ENGINE_CACHE`` entries (default 32): evicting an
     entry drops its jit function, so programs for long-gone graphs/Lmax
     variants are garbage-collected instead of accumulating across a
     serving process's lifetime.
     """
-    key = (tree, int(chunk), int(Lmax), _resolve_backend(backend), mesh)
+    lanes = _as_lanes(trees)
+    key = (lanes, int(chunk), int(Lmax), _resolve_backend(backend), mesh)
     fn = _WINDOW_FN_LRU.get(key)
     if fn is None:
-        fn = make_engine_window_fn(tree, chunk, Lmax=Lmax, backend=key[3],
+        fn = make_engine_window_fn(lanes, chunk, Lmax=Lmax, backend=key[3],
                                    mesh=mesh)
         _WINDOW_FN_LRU[key] = fn
     _WINDOW_FN_LRU.move_to_end(key)
@@ -207,9 +243,10 @@ def clear_window_cache() -> None:
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class PlanKey:
-    """Fusion key: jobs sharing it run through one compiled program."""
+    """Fusion key: jobs sharing it (plus Weights identity) form one
+    tree-cohort and run through one compiled program."""
 
-    tree: SpanningTree
+    signature: tuple  # spanning_tree.tree_signature of every member tree
     chunk: int
     Lmax: int
     backend: str     # resolved sampler backend ("xla" | "pallas")
@@ -252,6 +289,9 @@ class EngineJob:
     acc: dict = field(default_factory=dict)
     base_key: Any = None
     group_size: int = 1
+    # tree-cohort coordinates, resolved by plan_jobs: the job reads cell
+    # ``[stream(seed), lane]`` of its cohort's window sums
+    lane: int = 0
     # timings (tree_select_s/preprocess_s are filled by the front-ends)
     sampling_s: float = 0.0
     preprocess_s: float = 0.0
@@ -263,6 +303,10 @@ class JobGroup:
     key: PlanKey
     wts: Weights
     jobs: list
+    # deduped lane trees (first-seen job order; one count fn each) and
+    # the deduped seed-stream width the cohort key stacks pad to
+    lane_trees: tuple = ()
+    n_streams: int = 1
 
 
 @dataclass
@@ -292,9 +336,22 @@ class EngineStats:
     dispatches: int = 0         # compiled window programs launched
     fused_dispatches: int = 0   # dispatches carrying more than one job
     job_windows: int = 0        # job x window pairs covered
+    # tree-cohort fan-out accounting (shared-sample multi-motif serving)
+    tree_cohorts: int = 0        # cohort windows dispatched
+    cohort_motif_lanes: int = 0  # distinct motif lanes over those windows
+    samples_shared: int = 0      # samples consumed without being redrawn
+
+    @property
+    def motifs_per_cohort(self) -> float:
+        """Mean motif-lane fan-out per cohort window (1.0 = no sharing)."""
+        if not self.tree_cohorts:
+            return 0.0
+        return self.cohort_motif_lanes / self.tree_cohorts
 
     def reset(self) -> None:
         self.dispatches = self.fused_dispatches = self.job_windows = 0
+        self.tree_cohorts = self.cohort_motif_lanes = 0
+        self.samples_shared = 0
 
 
 STATS = EngineStats()
@@ -353,6 +410,14 @@ def plan_jobs(jobs, *, dev: dict, chunk: int = 8192, Lmax: int = 16,
     ``sampler_backend`` is resolved per job: pallas-ineligible jobs are
     downgraded to "xla" individually (reason recorded), which splits
     their fused group instead of downgrading every job in it.
+
+    Jobs group into tree-cohorts keyed by ``(tree_signature, chunk,
+    Lmax, backend)`` + Weights identity: within a group, distinct trees
+    become count-fn *lanes* and distinct seeds become sample *streams*
+    (``job.lane`` records the job's lane; its stream row is resolved
+    per-cohort at dispatch).  Distinct motifs land in one cohort exactly
+    when the batch planner resolved them to one shared Weights object
+    (signature-keyed preprocess cache).
     """
     sb_req = _resolve_backend(sampler_backend)
     elig: dict[int, tuple[bool, str]] = {}
@@ -381,14 +446,21 @@ def plan_jobs(jobs, *, dev: dict, chunk: int = 8192, Lmax: int = 16,
                 job.acc = {kk: int(acc[kk]) for kk in _ACC_KEYS}
         else:
             _load_checkpoint(job, chunk)
-        gkey = (PlanKey(job.tree, int(chunk), int(Lmax), job.backend),
+        gkey = (PlanKey(tree_signature(job.tree), int(chunk), int(Lmax),
+                        job.backend),
                 id(job.wts))
         if gkey not in groups:
             groups[gkey] = JobGroup(key=gkey[0], wts=job.wts, jobs=[])
         groups[gkey].jobs.append(job)
     for group in groups.values():
+        lanes: dict = {}      # tree -> lane index (first-seen job order)
+        seeds: set = set()
         for job in group.jobs:
             job.group_size = len(group.jobs)
+            job.lane = lanes.setdefault(job.tree, len(lanes))
+            seeds.add(job.seed)
+        group.lane_trees = tuple(lanes)
+        group.n_streams = len(seeds)
     return ExecutionPlan(jobs=list(jobs), groups=list(groups.values()),
                          dev=dev, mesh=mesh, chunk=int(chunk),
                          Lmax=int(Lmax),
@@ -514,13 +586,16 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
     on the ``checkpoint_every``-aligned grid — form a cohort and dispatch
     together; fresh same-budget jobs stay fused for their whole run,
     resumed or short-budget jobs peel off into their own cohorts without
-    perturbing anyone's chunk -> key map.  Every cohort pads its key
-    stack to the GROUP width, so the compiled program sees one stable
-    ``[J, 2]`` shape across the group's whole drain (no retrace when a
-    short-budget job finishes — on real hardware a window recompile
-    costs far more than the padded lanes, which replay the lead job's
-    keys and have their sums discarded).  Fused jobs report the shared
-    dispatch wall-clock as their ``sampling_s``.
+    perturbing anyone's chunk -> key map.  A cohort's key stack holds one
+    row per DISTINCT seed (jobs sharing a seed read the same sample
+    stream — ``STATS.samples_shared`` counts what they did not redraw)
+    and is padded to the group's stream width, so the compiled program
+    sees one stable ``[J, 2]`` shape across the group's whole drain (no
+    retrace when a short-budget job finishes — on real hardware a window
+    recompile costs far more than the padded rows, which replay the lead
+    stream's keys and have their sums discarded).  Each job reads cell
+    ``[stream(seed), lane(tree)]`` of the ``[J, M]`` window sums.  Fused
+    jobs report the shared dispatch wall-clock as their ``sampling_s``.
 
     Resilience (see ``repro.resilience``): every dispatch runs through a
     transient-retry loop and, on persistent failure, the per-cohort
@@ -538,7 +613,7 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
             fn = fns.get(backend)
             if fn is None:
                 fire("sampler.call", tag=backend)
-                fn = cached_window_fn(_group.key.tree, _group.key.chunk,
+                fn = cached_window_fn(_group.lane_trees, _group.key.chunk,
                                       Lmax=_group.key.Lmax, backend=backend,
                                       mesh=plan.mesh)
                 fns[backend] = fn
@@ -556,9 +631,17 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
                 cohorts.setdefault((j0, n, job.backend, job.max_window),
                                    []).append(job)
             for (j0, n, _, _), cjobs in cohorts.items():
-                pad = len(group.jobs) - len(cjobs)
-                base_keys = jnp.stack([j.base_key for j in cjobs]
-                                      + [cjobs[0].base_key] * pad)
+                # stream rows: first-seen dedupe by seed — jobs sharing a
+                # seed consume ONE sample row (the shared-stream win);
+                # pad to the group's stream width for shape stability
+                row_of: dict = {}
+                keys: list = []
+                for job in cjobs:
+                    if job.seed not in row_of:
+                        row_of[job.seed] = len(keys)
+                        keys.append(job.base_key)
+                pad = group.n_streams - len(keys)
+                base_keys = jnp.stack(keys + [keys[0]] * pad)
                 t0 = time.perf_counter()
                 sums, n_disp = _run_cohort_window(plan, group, get_fn,
                                                   cjobs, base_keys, j0, n)
@@ -568,16 +651,21 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
                 STATS.job_windows += len(cjobs)
                 if len(cjobs) > 1:
                     STATS.fused_dispatches += 1
-                for i, job in enumerate(cjobs):
+                STATS.tree_cohorts += 1
+                STATS.cohort_motif_lanes += len({j.lane for j in cjobs})
+                STATS.samples_shared += (plan.chunk * n
+                                         * (len(cjobs) - len(keys)))
+                for job in cjobs:
+                    wsums = {kk: int(sums[kk][row_of[job.seed], job.lane])
+                             for kk in _ACC_KEYS}
                     for kk in _ACC_KEYS:
-                        job.acc[kk] += int(sums[kk][i])
+                        job.acc[kk] += wsums[kk]
                     job.cursor = j0 + n
                     job.sampling_s += dt
                     if job.checkpoint_path:
                         _write_checkpoint(job, plan.chunk)
                     if on_window is not None:
-                        on_window(job, {kk: int(sums[kk][i])
-                                        for kk in _ACC_KEYS}, j0, n)
+                        on_window(job, wsums, j0, n)
             active = [j for j in active if j.cursor < j.n_chunks]
 
     results = []
@@ -587,7 +675,9 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
         # partial is bit-identical to a clean run with budget k_done
         # (same fold_in keys, exact int64 sums)
         k_done = job.cursor * plan.chunk if job.degraded else job.k_eff
-        est = W * job.acc["cnt2"] / (2.0 * k_done) if k_done else 0.0
+        # per-motif unbiasing: the job's OWN W and cnt2 over the (possibly
+        # cohort-shared) sample stream — see estimator.unbias_estimate
+        est = unbias_estimate(W, job.acc["cnt2"], k_done)
         results.append(EstimateResult(
             estimate=est,
             W=W, k=k_done, valid=job.acc["valid"],

@@ -32,6 +32,21 @@ _ACC_KEYS = ("cnt2", "valid", "fail_vmap", "fail_delta", "fail_order",
              "overflow")
 
 
+def unbias_estimate(W: int, cnt2_sum: int, k: int) -> float:
+    """Alg. 6 unbiasing: ``C^ = W * sum(cnt2) / (2k)``.
+
+    In a tree-cohort (engine shared-sample multi-motif path) this is the
+    per-motif correction: every lane applies its OWN ``W`` and ``cnt2``
+    accumulator over the SHARED instance stream.  The stream's Alg. 3
+    distribution depends only on the tree signature (which all lanes
+    share), so ``E[cnt2]`` under it is each motif's own count and the
+    per-lane estimate stays unbiased — and, because the accumulator is an
+    exact int64 sum keyed by (seed, chunk) alone, bit-identical to the
+    motif's solo run at the same budget.
+    """
+    return W * cnt2_sum / (2.0 * k) if k else 0.0
+
+
 def make_chunk_fn(tree: SpanningTree, chunk: int, Lmax: int = 16,
                   sampler_backend: str | None = None):
     """Fused sample->validate->count->reduce for one chunk (one dispatch).

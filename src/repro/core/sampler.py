@@ -116,6 +116,43 @@ def make_batched_sample_fn(tree: SpanningTree, K: int,
     return jax.vmap(fn, in_axes=(None, None, 0))
 
 
+def make_cohort_count_fn(lane_trees, K: int, Lmax: int = 16,
+                         keys: tuple = ("cnt2", "valid", "fail_vmap",
+                                        "fail_delta", "fail_order",
+                                        "overflow")):
+    """Score ONE shared sample batch against every lane motif.
+
+    ``fn(dev, wts, samples) -> {key: [J, M] int64}``: ``samples`` is a
+    ``make_batched_sample_fn`` batch (leading ``[J]`` stream axis) and
+    lane ``l`` of the ``[M]`` motif axis re-validates the SAME instances
+    under its own tree's pi-order and runs its own DeriveCnt DP
+    (``core.validate.make_count_fn``), reduced over the chunk axis.
+
+    This is the tree-cohort accept/reject (odeN-style): the instance
+    stream is drawn once per (seed, chunk) from the shared tree
+    *signature*, and each registered motif derives its accept/reject
+    only from that shared sample and its own spec — never from a
+    per-motif key (lint rule ``det-cohort-key`` bans folding a motif or
+    lane index into a sampling key here).  Because signature-equal trees
+    induce the same Alg. 3 instance distribution, every lane's
+    ``E[cnt2]`` is its own motif's unbiased count, and its sums are
+    bit-identical to a solo run of that motif at the same seed — which
+    is what keeps cohort membership invisible in the results.
+    """
+    from .validate import make_count_fn
+    count_fns = tuple(jax.vmap(make_count_fn(t, K, Lmax=Lmax),
+                               in_axes=(None, None, 0))
+                      for t in lane_trees)
+
+    def fn(dev, wts, samples):
+        outs = [cf(dev, wts, samples) for cf in count_fns]
+        return {k: jnp.stack([o[k].sum(axis=1).astype(jnp.int64)
+                              for o in outs], axis=1)
+                for k in keys}
+
+    return fn
+
+
 def _make_sample_fn_xla(tree: SpanningTree, K: int):
     """The XLA gather-chain sampler (exact int64 throughout)."""
     S = tree.num_edges

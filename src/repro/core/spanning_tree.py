@@ -81,6 +81,25 @@ class SpanningTree:
         return "\n".join(lines)
 
 
+def tree_signature(tree: SpanningTree) -> tuple:
+    """Structural identity of a rooted tree, independent of its host motif.
+
+    Two trees with equal signatures draw **bit-identical sample streams**
+    (both sampler backends) and preprocess to **bit-identical Weights**:
+    the samplers (``core.sampler``, ``kernels/tree_sampler``) and the
+    weight DP (``core.weights``) consume only the fields hashed here —
+    root, parent links, dependency triples, topo order and vertex
+    introduction — never ``edge_ids`` or the motif's non-tree edges,
+    which matter only to per-motif validation (``core.validate``).
+
+    The execution engine fuses jobs whose trees share a signature into
+    one *tree-cohort*: one shared tree-instance stream, scored by every
+    member motif's own count fn (the odeN-style multi-motif path).
+    """
+    return (tree.motif.num_vertices, tree.root, tree.parent, tree.deps,
+            tree.topo_down, tree.vertex_source)
+
+
 def _is_tree(motif: TemporalMotif, subset: tuple[int, ...]) -> bool:
     n = motif.num_vertices
     if len(subset) != n - 1:

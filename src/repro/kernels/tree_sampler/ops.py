@@ -13,6 +13,18 @@ use to fall back to XLA outside the kernel's exactness/capacity envelope:
 * the kernel-resident structure must fit the VMEM budget
   (``REPRO_SAMPLER_VMEM_MB``, default 192 — generous for interpret mode;
   set ~14 for a real single-core TPU deployment).
+
+Structural-fields-only contract: this module (like the XLA sampler it
+mirrors) reads ONLY the fields captured by
+``core.spanning_tree.tree_signature`` — ``num_vertices``, ``root``,
+``parent``, ``deps``, ``topo_down``, ``vertex_source`` and the derived
+``num_edges`` — never ``edge_ids`` or non-tree motif edges.  That is
+what lets the engine's tree-cohorts share ONE sample stream across
+signature-equal trees: two trees with equal signatures drive this
+sampler to bit-identical draws, so any motif in the cohort may score
+the shared stream with its own count lane.  Adding a read of a
+non-signature field here would silently break cohort bit-identity —
+extend ``tree_signature`` in the same change.
 """
 from __future__ import annotations
 

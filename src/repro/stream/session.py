@@ -26,9 +26,15 @@ which is what makes the determinism contract possible at all.
 ``api.estimate(epoch.graph, Q.motif, Q.delta, Q.k, seed=Q.seed)`` on that
 epoch's snapshot graph (asserted by tests/test_stream.py for both
 sampler backends, across compaction and eviction boundaries).  Standing
-queries sharing a spanning tree fuse into one vmapped dispatch per
-window, exactly like ``estimate_many`` jobs — fusion is an execution
-optimization and never changes bits (engine contract).
+queries whose chosen trees share a structural signature fuse into one
+**tree-cohort** per window: one shared tree-instance sample stream
+scored by every member motif's own count lane (the odeN multi-motif
+path — dozens of standing queries on one tree cost ~one sampling pass
+per advance; ``engine.STATS.motifs_per_cohort`` / ``samples_shared``
+measure the realized fan-out, surfaced in the serve ``stats`` verb).
+Fusion is an execution optimization and never changes bits (engine
+contract): each query's accept/reject derives only from the shared
+stream and its own motif spec.
 """
 from __future__ import annotations
 

@@ -133,6 +133,39 @@ def test_det_key_origin_fires_on_seed_arithmetic(tmp_path):
     assert "det-key-origin" in rules_fired(p)
 
 
+def test_det_cohort_key_fires_on_motif_fold(tmp_path):
+    p = corpus(tmp_path, "repro/core/bad_cohort.py", """
+        import jax
+
+        def cohort_keys(base_key, j, lane):
+            k = jax.random.fold_in(base_key, j)
+            return jax.random.fold_in(k, lane)
+    """)
+    findings = lint_file(p)
+    assert any(f.rule == "det-cohort-key" and "'lane'" in f.message
+               for f in findings)
+
+
+def test_det_cohort_key_fires_on_motif_attribute(tmp_path):
+    p = corpus(tmp_path, "repro/stream/bad_cohort_attr.py", """
+        import jax
+
+        def stream_key(base_key, job):
+            return jax.random.fold_in(base_key, job.motif_index)
+    """)
+    assert "det-cohort-key" in rules_fired(p)
+
+
+def test_det_cohort_key_allows_chunk_fold(tmp_path):
+    p = corpus(tmp_path, "repro/core/ok_cohort.py", """
+        import jax
+
+        def chunk_key(base_key, j):
+            return jax.random.fold_in(base_key, j)
+    """)
+    assert "det-cohort-key" not in rules_fired(p)
+
+
 def test_det_impure_in_traced_fires_on_wallclock(tmp_path):
     p = corpus(tmp_path, "repro/stream/bad_clock.py", """
         import time
@@ -360,7 +393,7 @@ def test_all_rules_have_trigger_coverage():
     """Every registered rule fires somewhere in this file's bad corpus."""
     covered = {"env-seam", "retrace-static-argnames",
                "retrace-scalar-capture", "det-key-origin",
-               "det-impure-in-traced", "det-host-rng",
+               "det-cohort-key", "det-impure-in-traced", "det-host-rng",
                "exact-narrowing-cast", "resilience-bare-except"}
     assert covered == set(RULES)
 

@@ -1,0 +1,181 @@
+"""Tree-cohort shared-sample multi-motif estimation (the odeN path).
+
+The contract under test: jobs whose chosen trees share a *structural
+signature* fuse into one tree-cohort — ONE shared tree-instance sample
+stream per (seed, chunk), scored by every member motif's own count fn —
+and each member's counts stay **bit-identical** to its solo run
+(cohort membership must be invisible in the numbers, only in the
+dispatch/STATS accounting).  Per-motif accumulators checkpoint and
+resume across mesh shapes exactly like solo jobs.
+
+The workload is the wedge family: every motif below extends
+``0-1,1-2`` in a way that keeps min-W tree selection on the same rooted
+two-edge tree, so a single ``BatchPlanner`` resolves all of them to one
+signature and ONE shared ``Weights`` object (asserted as a
+precondition, so a tree-selection change that breaks the sharing fails
+loudly here instead of silently de-fusing the cohort).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import engine
+from repro.core.batch import BatchPlanner, estimate_many
+from repro.core.estimator import estimate
+from repro.core.motif import get_motif
+from repro.graphs import powerlaw_temporal_graph
+
+DELTA = 3_000
+CHUNK = 256
+CKPT_EVERY = 2
+
+# 5 wedge-signature motifs: one cohort, five lanes (see module docstring)
+COHORT_5 = ("0-1,1-2", "0-1,1-2,1-0", "0-1,1-2,1-2",
+            "0-1,1-2,1-0,1-0", "0-1,1-2,1-0,1-2")
+
+PREAMBLE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+from repro.api import EstimateConfig, Request, Session
+from repro.graphs import powerlaw_temporal_graph
+from repro.launch.mesh import make_estimator_mesh
+g = powerlaw_temporal_graph(n=120, m=1_500, time_span=30_000, seed=5)
+mesh = make_estimator_mesh()
+assert mesh.shape["data"] == 8, mesh.shape
+"""
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, timeout: int = 420) -> str:
+    r = subprocess.run([sys.executable, "-c",
+                        PREAMBLE + textwrap.dedent(code)],
+                       capture_output=True, text=True, cwd=REPO,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return powerlaw_temporal_graph(n=120, m=1_500, time_span=30_000, seed=5)
+
+
+def test_cohort_workload_shares_signature_and_weights(graph):
+    """Precondition: the wedge family plans to ONE signature + Weights."""
+    from repro.core.spanning_tree import tree_signature
+
+    planner = BatchPlanner(graph)
+    tree0, wts0 = planner.plan(get_motif(COHORT_5[0]), DELTA)
+    sig0 = tree_signature(tree0)
+    for mn in COHORT_5[1:]:
+        tree, wts = planner.plan(get_motif(mn), DELTA)
+        assert tree_signature(tree) == sig0, mn
+        assert wts is wts0, mn
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_solo_vs_cohort_bit_identical(graph, backend):
+    """Each motif's counts inside the 5-motif cohort == its solo run,
+    while the cohort samples ONCE per window (STATS accounting)."""
+    jobs = [(mn, DELTA, 512) for mn in COHORT_5]
+    engine.STATS.reset()
+    cohort = estimate_many(graph, jobs, seed=0, chunk=CHUNK,
+                           checkpoint_every=CKPT_EVERY,
+                           sampler_backend=backend)
+    # one group (shared signature + Weights), seeds all 0 -> one stream,
+    # k=512 spans one checkpoint window: ONE cohort dispatch total
+    assert engine.STATS.dispatches == 1
+    assert engine.STATS.fused_dispatches == 1
+    assert engine.STATS.job_windows == 5
+    assert engine.STATS.tree_cohorts == 1
+    assert engine.STATS.motifs_per_cohort == 5.0
+    # 4 of the 5 jobs consumed the window's 512 samples without redrawing
+    assert engine.STATS.samples_shared == 4 * 512
+    for (mn, d, k), rb in zip(jobs, cohort):
+        assert rb.sampler_backend == backend
+        assert rb.fused_jobs == 5
+        rs = estimate(graph, get_motif(mn), d, k, seed=0, chunk=CHUNK,
+                      checkpoint_every=CKPT_EVERY, sampler_backend=backend)
+        assert rb.cnt2_sum == rs.cnt2_sum, mn
+        assert rb.valid == rs.valid and rb.fail_vmap == rs.fail_vmap, mn
+        assert rb.estimate == rs.estimate, mn
+        assert rb.W == rs.W and rb.tree_edges == rs.tree_edges, mn
+
+
+def test_cohort_membership_invariance(graph):
+    """A motif's estimate is the same bit pattern no matter which other
+    motifs joined its cohort (solo / pair / full five)."""
+    mn = COHORT_5[0]
+    solo, = estimate_many(graph, [(mn, DELTA, 512)], seed=0, chunk=CHUNK,
+                          checkpoint_every=CKPT_EVERY)
+    pair = estimate_many(graph, [(mn, DELTA, 512), (COHORT_5[3], DELTA, 512)],
+                         seed=0, chunk=CHUNK, checkpoint_every=CKPT_EVERY)
+    five = estimate_many(graph, [(m, DELTA, 512) for m in COHORT_5], seed=0,
+                         chunk=CHUNK, checkpoint_every=CKPT_EVERY)
+    assert solo.cnt2_sum == pair[0].cnt2_sum == five[0].cnt2_sum
+    assert solo.estimate == pair[0].estimate == five[0].estimate
+    assert solo.valid == pair[0].valid == five[0].valid
+
+
+def test_cohort_checkpoint_resume_across_mesh(graph, tmp_path):
+    """Per-motif accumulators written by a 1-device cohort run resume
+    bit-identically as a cohort on a forced 8-device mesh."""
+    from repro.api import EstimateConfig, Request, Session
+
+    refs = {mn: estimate(graph, get_motif(mn), DELTA, 1024, seed=0,
+                         chunk=CHUNK, checkpoint_every=CKPT_EVERY)
+            for mn in COHORT_5}
+    cks = {mn: str(tmp_path / f"cohort{i}.ckpt")
+           for i, mn in enumerate(COHORT_5)}
+    cfg = EstimateConfig(chunk=CHUNK, checkpoint_every=CKPT_EVERY, seed=0)
+    session = Session(graph, cfg)
+    handles = session.submit_many([
+        Request(motif=mn, delta=DELTA, k=512, checkpoint_path=cks[mn])
+        for mn in COHORT_5])
+    for h in handles:
+        assert h.result().k == 512
+    out = run_sub(f"""
+        cfg = EstimateConfig(chunk={CHUNK}, checkpoint_every={CKPT_EVERY},
+                             seed=0)
+        session = Session(g, cfg, mesh=mesh)
+        cks = {cks!r}
+        handles = session.submit_many([
+            Request(motif=mn, delta={DELTA}, k=1024, checkpoint_path=ck)
+            for mn, ck in cks.items()])
+        got = {{}}
+        for mn, h in zip(cks, handles):
+            res = h.result()
+            assert res.mesh_shape == (8,), res.mesh_shape
+            got[mn] = dict(cnt2=res.cnt2_sum, valid=res.valid,
+                           est=res.estimate)
+        print(json.dumps(got))
+    """)
+    got = json.loads(out.strip().splitlines()[-1])
+    for mn, ref in refs.items():
+        assert got[mn]["cnt2"] == ref.cnt2_sum, mn
+        assert got[mn]["valid"] == ref.valid, mn
+        assert got[mn]["est"] == ref.estimate, mn
+
+
+def test_warm_cohort_rerun_no_retrace(graph, no_retrace):
+    """A warm cohort re-run re-hits the compiled window program: zero
+    recompiles, one dispatch, same bits."""
+    jobs = [(mn, DELTA, 512) for mn in COHORT_5]
+    cold = estimate_many(graph, jobs, seed=0, chunk=CHUNK,
+                         checkpoint_every=CKPT_EVERY)
+    with no_retrace() as probe:
+        warm = estimate_many(graph, jobs, seed=0, chunk=CHUNK,
+                             checkpoint_every=CKPT_EVERY)
+    assert probe.dispatches == 1
+    assert [r.cnt2_sum for r in warm] == [r.cnt2_sum for r in cold]
+    assert [r.estimate for r in warm] == [r.estimate for r in cold]
