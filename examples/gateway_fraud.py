@@ -1,0 +1,136 @@
+"""Multi-tenant AML screening through the gateway: witnesses per epoch.
+
+    PYTHONPATH=src python examples/gateway_fraud.py
+    PYTHONPATH=src python examples/gateway_fraud.py --epochs 8 --k 16384
+
+The single-tenant version of this example (examples/streaming_fraud.py)
+drives one ``StreamingSession`` by hand.  This port runs the SAME
+screening through ``repro.gateway``: one process, one tenant pool, two
+unrelated live graphs —
+
+* ``fintxn``: the transaction log (power-law background + planted
+  laundering rings and smurfing bursts), watched by standing fraud
+  queries — the temporal cycle M5-3 with ``witnesses=5`` and the
+  scatter-gather pattern;
+* ``social``: a power-law contact stream, a second tenant sharing the
+  process to show pooling — its wedge query plans onto different
+  motifs, but both tenants' padded snapshot buckets and spanning trees
+  feed ONE process-global compiled-program cache, so the second
+  tenant's advances ride the first's warm path wherever shapes agree.
+
+What the gateway adds over the hand-driven loop:
+
+* ``open_tenant``/``close_tenant`` lifecycle with idle-LRU capacity —
+  here just two resident tenants, interleaved epoch by epoch;
+* per-tenant WAL-able stream stores and serving counters
+  (``Tenant.describe()`` at the end is the wire ``stats`` block);
+* **witness streaming**: the M5-3 fraud query asks for up to 5
+  accepted full-match edge tuples per epoch.  Those are ACTUAL
+  suspicious transfer chains — (src, dst, t) triples in motif order —
+  pulled from the deterministic device-side reservoir, not a post-hoc
+  search: same seed, same witnesses, any mesh, any tenant interleaving.
+
+Counts stay bit-identical to solo runs (the gateway schedules WHEN
+work runs, never what it draws).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--k", type=int, default=1 << 13)
+    ap.add_argument("--delta", type=int, default=2_000)
+    ap.add_argument("--horizon", type=int, default=80_000)
+    ap.add_argument("--accounts", type=int, default=300)
+    ap.add_argument("--m", type=int, default=9_000)
+    ap.add_argument("--witnesses", type=int, default=5)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.api import EstimateConfig
+    from repro.gateway import GatewayState
+    from repro.graphs import fintxn_temporal_graph, powerlaw_temporal_graph
+    from repro.stream import StandingQuery
+
+    def replay(g):
+        order = np.argsort(g.t, kind="stable")
+        return (g.src[order].astype(np.int64), g.dst[order].astype(np.int64),
+                g.t[order].astype(np.int64))
+
+    fin = replay(fintxn_temporal_graph(
+        n_accounts=args.accounts, m=args.m, time_span=240_000, n_rings=25,
+        ring_size=5, n_smurf=20, seed=0))
+    soc = replay(powerlaw_temporal_graph(
+        n=args.accounts, m=args.m, time_span=240_000, seed=7))
+
+    gw = GatewayState(EstimateConfig(chunk=1024, checkpoint_every=2),
+                      max_tenants=4)
+    try:
+        t_fin = gw.open_tenant("fintxn", stream=True, horizon=args.horizon)
+        t_soc = gw.open_tenant("social", stream=True, horizon=args.horizon)
+        cycle = t_fin.stream.subscribe(StandingQuery(
+            "M5-3", args.delta, args.k, seed=0, witnesses=args.witnesses))
+        scatter = t_fin.stream.subscribe(StandingQuery(
+            "scatter-gather", args.delta, args.k, seed=0))
+        wedge = t_soc.stream.subscribe(StandingQuery(
+            "0-1,1-2", args.delta, args.k, seed=0))
+
+        n_ep = args.epochs
+        batches = {name: (arrs, len(arrs[0]) // n_ep)
+                   for name, arrs in (("fintxn", fin), ("social", soc))}
+        print(f"two tenants, one pool: fintxn {len(fin[0])} transfers + "
+              f"social {len(soc[0])} contacts  |  horizon={args.horizon} "
+              f"delta={args.delta} k={args.k}")
+        print(f"\n{'epoch':>5s} {'tenant':>8s} {'live m':>7s}"
+              f"{'M5-3':>12s}{'scat-gath':>12s}{'wedge':>12s} {'adv':>7s}")
+        for e in range(n_ep):
+            for tenant, (qids, names) in ((t_fin, ((cycle, scatter),
+                                                   ("M5-3", "scat"))),
+                                          (t_soc, ((wedge,), ("wedge",)))):
+                (src, dst, t), batch = batches[tenant.name]
+                lo = e * batch
+                hi = len(src) if e == n_ep - 1 else lo + batch
+                tenant.stream.ingest(src[lo:hi], dst[lo:hi], t[lo:hi])
+                t0 = time.perf_counter()
+                er = tenant.stream.advance()
+                dt = time.perf_counter() - t0
+                ep = er.epoch
+                cols = {"M5-3": " " * 12, "scat": " " * 12,
+                        "wedge": " " * 12}
+                for qid, nm in zip(qids, names):
+                    cols[nm] = f"{er.results[qid].estimate:>12.4g}"
+                print(f"{ep.index:>5d} {tenant.name:>8s} {ep.m_real:>7d}"
+                      f"{cols['M5-3']}{cols['scat']}{cols['wedge']} "
+                      f"{dt:>6.2f}s")
+                if tenant is t_fin:
+                    wit = er.results[cycle].witnesses or ()
+                    for w in wit:
+                        chain = " -> ".join(
+                            f"({s}->{d} @{tt})" for s, d, tt in w["edges"])
+                        print(f"{'':>13s} suspicious M5-3 chain "
+                              f"x{w['cnt']}: {chain}")
+
+        print("\nper-tenant stats blocks (the wire `stats` verb):")
+        for name, tenant in gw.tenants.items():
+            print(f"  {name}: {tenant.describe()}")
+    finally:
+        gw.close_all()
+
+    print("\nInterpretation: the M5-3 witness chains are concrete "
+          "laundering candidates — each line is one accepted full match "
+          "(a transfer chain realizing the motif within delta), drawn "
+          "deterministically from the sampling stream, so re-running "
+          "prints the SAME chains.  The social tenant rides in the same "
+          "process: its counts are bit-identical to a solo run, and its "
+          "advances warm up against the compiled programs the pool "
+          "already holds.")
+
+
+if __name__ == "__main__":
+    main()

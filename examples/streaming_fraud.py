@@ -5,6 +5,8 @@
 
 The offline fraud example (examples/fraud_detection.py) screens a frozen
 transaction graph; real AML monitoring watches transfers as they clear.
+The gateway port (examples/gateway_fraud.py) runs the same screening as
+one of several pooled tenants and streams witness edge tuples per epoch.
 This example replays a synthetic transaction log (the ``fintxn``
 generator: power-law background + planted laundering rings and
 scatter-gather smurfing bursts) through ``repro.stream``:

@@ -232,6 +232,79 @@ for backend in ("xla", "pallas"):
           f"estimate={rec['estimate']}")
 PYEOF
 
+# gateway: drive a real --serve --gateway process with two INTERLEAVED
+# tenant command streams (a graph tenant with witnesses + a stream
+# tenant with a standing query).  The whole burst is written before any
+# reply is read — intake enqueues while drains run — then the stats
+# probe (answered inline, never draining) lands after the drained
+# responses prove the pool is live.  Asserts per-tenant routing,
+# witness payloads, and the per-tenant stats blocks.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 580 python - <<'PYEOF'
+import json, subprocess, sys
+
+p = subprocess.Popen(
+    [sys.executable, "-m", "repro.launch.estimate", "--serve", "--gateway",
+     "--chunk", "256", "--max-tenants", "4"],
+    stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+    stderr=subprocess.DEVNULL, text=True)
+burst = [
+    {"cmd": "open_tenant", "tenant": "fin",
+     "graph": "fintxn:n_accounts=60,m=1200,time_span=40000,seed=3"},
+    {"cmd": "open_tenant", "tenant": "soc", "stream": True,
+     "horizon": 12000},
+    # interleaved: fin request / soc stream verbs / fin request ...
+    {"tenant": "fin", "id": 1, "motif": "M4-2", "delta": 2000, "k": 512,
+     "witnesses": 3},
+    {"cmd": "subscribe", "tenant": "soc", "motif": "0-1,1-2",
+     "delta": 2000, "k": 512},
+    {"tenant": "fin", "id": 2, "motif": "0-1,1-2", "delta": 1500,
+     "k": 512},
+    {"cmd": "ingest", "tenant": "soc",
+     "edges": [[i % 11, (i + 1) % 11, 120 * i] for i in range(150)]},
+    {"cmd": "advance", "tenant": "soc"},
+]
+p.stdin.write("".join(json.dumps(o) + "\n" for o in burst))
+p.stdin.flush()
+
+rs = []
+def have(pred):
+    return any(pred(r) for r in rs)
+# the terminal response of each queue: both fin finals, soc's epoch
+# sub-response and advance summary (cross-tenant emit order is free)
+while not (have(lambda r: r.get("id") == 2 and not r.get("progress"))
+           and have(lambda r: "sub" in r and "estimate" in r)
+           and have(lambda r: r.get("cmd") == "advance")):
+    rs.append(json.loads(p.stdout.readline()))
+
+def call(obj, n=1):
+    p.stdin.write(json.dumps(obj) + "\n")
+    p.stdin.flush()
+    return [json.loads(p.stdout.readline()) for _ in range(n)]
+
+finals = {r["id"]: r for r in rs
+          if r.get("id") is not None and not r.get("progress")}
+assert finals[1]["ok"] and finals[1]["tenant"] == "fin", finals
+assert finals[2]["ok"] and finals[2]["tenant"] == "fin", finals
+assert 1 <= len(finals[1]["witnesses"]) <= 3, finals[1]
+prog = [r for r in rs if r.get("progress")]
+assert prog and all(r["tenant"] == "fin" for r in prog), prog
+subs = [r for r in rs if "sub" in r and "estimate" in r]
+assert len(subs) == 1 and subs[0]["ok"] and subs[0]["tenant"] == "soc"
+stats = call({"cmd": "stats"})[0]
+assert set(stats["tenants"]) == {"fin", "soc"}, stats
+assert stats["tenants"]["fin"]["mode"] == "graph"
+assert stats["tenants"]["fin"]["served"] == 2, stats
+assert stats["tenants"]["soc"]["mode"] == "stream"
+assert stats["tenants"]["soc"]["epoch"] == 1, stats
+assert stats["scheduler"]["turns"] > 0, stats
+closed = call({"cmd": "close_tenant", "tenant": "soc"})[0]
+assert closed["ok"] and closed["pool_size"] == 1, closed
+quit_r = call({"cmd": "quit"})[0]
+assert quit_r["served"] == 3, quit_r      # 2 fin requests + 1 epoch sub
+p.wait(timeout=60)
+print("gateway serve smoke OK")
+PYEOF
+
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite batch --fast
@@ -247,4 +320,6 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python -m benchmarks.run --suite multimotif --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite resilience --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite gateway --fast
 fi

@@ -24,7 +24,8 @@ ESTIMATOR_SCOPES = ("repro/core/", "repro/kernels/")
 DETERMINISM_SCOPES = ESTIMATOR_SCOPES + ("repro/stream/",)
 # serving-stack layers where every swallowed exception must be
 # classified through the resilience taxonomy (rule resilience-bare-except)
-RESILIENCE_SCOPES = ("repro/api/", "repro/stream/", "repro/resilience/")
+RESILIENCE_SCOPES = ("repro/api/", "repro/stream/", "repro/resilience/",
+                     "repro/gateway/")
 EVERYWHERE = ("",)
 
 # pseudo-rule for malformed suppression comments; never suppressible

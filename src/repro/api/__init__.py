@@ -127,6 +127,18 @@ stable).  The serve loop grows matching ``ingest``/``advance``/
 ``subscribe`` verbs (``--serve --stream``); each per-epoch standing
 count is bit-identical to a cold ``estimate()`` on that epoch's
 snapshot.
+
+Gateway (many tenants, one process)
+-----------------------------------
+Both serve modes above are single-graph and synchronous.  The
+production front door is ``repro.gateway`` (``--serve --gateway``):
+many independent graph/stream tenants pooled in one process behind a
+fair single-dispatcher scheduler — request intake and response emit
+overlap running drains, per-tenant quotas shed overload with the
+structured ``overloaded`` error kind, and ``Request(witnesses=n)``
+streams up to ``n`` accepted full-match edge tuples (a deterministic
+device-side reservoir) alongside each count.  See the
+``repro.gateway`` package docstring for the canonical usage guide.
 """
 from .config import EstimateConfig
 from .serve import serve_loop

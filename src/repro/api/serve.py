@@ -73,65 +73,13 @@ from __future__ import annotations
 
 import json
 import math
-import os
-import select
 import sys
-import time
 from typing import IO
 
+from ..gateway.io import LineSource as _LineSource
 from ..resilience import classify, error_payload, fire
 from ..resilience.retry import STATS as RSTATS
 from .session import Handle, Request, Session
-
-
-class _LineSource:
-    """Line reader with timeouts over a file object.
-
-    Real pipes/ttys go through ``select`` + ``os.read`` on the raw fd
-    (Python-level buffering would hide buffered lines from ``select``);
-    fd-less streams (``io.StringIO`` in tests) fall back to plain
-    ``readline``, treating all input as immediately available.
-
-    ``readline(timeout)`` -> line str WITH its trailing newline (so a
-    blank line is ``"\\n"``, distinguishable from EOF), ``None`` on
-    timeout, ``""`` only at EOF.
-    """
-
-    def __init__(self, f: IO):
-        self._f = f
-        try:
-            self._fd: int | None = f.fileno()
-        except (AttributeError, OSError, ValueError):
-            self._fd = None
-        self._buf = b""
-        self._eof = False
-
-    def readline(self, timeout: float | None = None) -> str | None:
-        if self._fd is None:
-            return self._f.readline()          # "" only at EOF
-        # the timeout is a TOTAL deadline for producing one line, not a
-        # per-select re-arm — a client trickling bytes cannot hold the
-        # coalescing window open past it
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            if b"\n" in self._buf:
-                line, _, self._buf = self._buf.partition(b"\n")
-                return line.decode("utf-8", "replace") + "\n"
-            if self._eof:
-                line, self._buf = self._buf, b""
-                return line.decode("utf-8", "replace")  # "" at true EOF
-            if deadline is not None:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    return None
-                ready, _, _ = select.select([self._fd], [], [], remaining)
-                if not ready:
-                    return None
-            data = os.read(self._fd, 1 << 16)
-            if not data:
-                self._eof = True
-            else:
-                self._buf += data
 
 
 def _response(rid, handle: Handle) -> dict:
@@ -147,12 +95,15 @@ def _response(rid, handle: Handle) -> dict:
     if res.degraded:
         d.update(degraded=True, degrade_reason=res.degrade_reason,
                  k_done=res.k)
+    if res.witnesses is not None:
+        d.update(witnesses=[dict(edges=[list(e) for e in w["edges"]],
+                                 cnt=w["cnt"]) for w in res.witnesses])
     return d
 
 
 _REQUEST_FIELDS = frozenset(
     ("id", "motif", "delta", "k", "seed", "target_rse", "k_max",
-     "deadline_ms"))
+     "deadline_ms", "witnesses"))
 
 
 def _parse_request(obj: dict) -> Request:
@@ -173,7 +124,8 @@ def _parse_request(obj: dict) -> Request:
                     else float(obj["target_rse"])),
         k_max=None if obj.get("k_max") is None else int(obj["k_max"]),
         deadline_s=(None if obj.get("deadline_ms") is None
-                    else float(obj["deadline_ms"]) / 1000.0))
+                    else float(obj["deadline_ms"]) / 1000.0),
+        witnesses=int(obj.get("witnesses") or 0))
 
 
 def _engine_stats() -> dict:
@@ -190,7 +142,8 @@ def _engine_stats() -> dict:
                 job_windows=ESTATS.job_windows,
                 tree_cohorts=ESTATS.tree_cohorts,
                 motifs_per_cohort=round(ESTATS.motifs_per_cohort, 3),
-                samples_shared=ESTATS.samples_shared)
+                samples_shared=ESTATS.samples_shared,
+                witness_dispatches=ESTATS.witness_dispatches)
 
 
 def _stats(session: Session | None, stream=None) -> dict:
@@ -234,7 +187,8 @@ def _health(stream, n_pending: int, served: int) -> dict:
 
 
 _SUBSCRIBE_FIELDS = frozenset(
-    ("cmd", "motif", "delta", "k", "seed", "target_rse", "k_max", "name"))
+    ("cmd", "motif", "delta", "k", "seed", "target_rse", "k_max", "name",
+     "witnesses"))
 
 
 def _parse_ingest(obj: dict):
@@ -251,12 +205,16 @@ def _parse_ingest(obj: dict):
 
 def _sub_response(qid: int, query, epoch_idx: int, res) -> dict:
     rse = res.rse
-    return dict(sub=qid, epoch=epoch_idx, ok=True, name=query.label,
-                estimate=res.estimate, W=res.W, k=res.k, valid=res.valid,
-                rse=None if rse is None or math.isinf(rse) else rse,
-                motif=res.motif, delta=res.delta,
-                sampler_backend=res.sampler_backend,
-                fused_jobs=res.fused_jobs)
+    d = dict(sub=qid, epoch=epoch_idx, ok=True, name=query.label,
+             estimate=res.estimate, W=res.W, k=res.k, valid=res.valid,
+             rse=None if rse is None or math.isinf(rse) else rse,
+             motif=res.motif, delta=res.delta,
+             sampler_backend=res.sampler_backend,
+             fused_jobs=res.fused_jobs)
+    if res.witnesses is not None:
+        d.update(witnesses=[dict(edges=[list(e) for e in w["edges"]],
+                                 cnt=w["cnt"]) for w in res.witnesses])
+    return d
 
 
 def serve_loop(session: Session | None, infile: IO = None,
@@ -399,7 +357,8 @@ def serve_loop(session: Session | None, infile: IO = None,
                         k_max=(None if obj.get("k_max") is None
                                else int(obj["k_max"])),
                         name=(None if obj.get("name") is None
-                              else str(obj["name"])))
+                              else str(obj["name"])),
+                        witnesses=int(obj.get("witnesses") or 0))
                     emit(dict(ok=True, cmd="subscribe",
                               sub=stream.subscribe(q), name=q.label))
                 except Exception as e:   # noqa: BLE001

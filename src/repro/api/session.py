@@ -58,6 +58,11 @@ from ..core.spanning_tree import SpanningTree
 from ..core.weights import Weights
 from .config import EstimateConfig
 
+#: reservoir-width ceiling for ``Request.witnesses`` — witness windows
+#: move O(witnesses) rows per dispatch; the cap keeps one request from
+#: turning the witness path into a bulk-extraction channel
+MAX_WITNESSES = 64
+
 
 @dataclass(frozen=True, eq=False)
 class Request:
@@ -78,6 +83,14 @@ class Request:
     ``degraded=True`` with the achieved ``rse`` and the samples actually
     drawn as ``k`` — graceful degradation, never an error.
 
+    ``witnesses=n`` asks for up to ``n`` accepted full-match edge tuples
+    alongside the count (``EstimateResult.witnesses``; each per-window
+    :class:`Progress` snapshot carries the running top-``n``).  Witness
+    capture is execution-only — the deterministic reservoir re-draws the
+    chunks the estimate counted (same ``fold_in`` keys, priorities from
+    ``(seed, chunk, position)`` alone), so the count stays bit-identical
+    and the selected witnesses are mesh- and cohort-invariant.
+
     ``tree``/``wts`` are the advanced injection seam the ``estimate()``
     shim uses: a fixed spanning tree skips Alg. 7 selection, and
     precomputed ``Weights`` skip preprocessing entirely.
@@ -91,6 +104,7 @@ class Request:
     k_max: int | None = None
     checkpoint_path: str | None = None
     deadline_s: float | None = None
+    witnesses: int = 0
     tree: SpanningTree | None = None
     wts: Weights | None = None
 
@@ -106,6 +120,9 @@ class Request:
         if self.deadline_s is not None and not self.deadline_s > 0:
             raise ValueError(
                 f"deadline_s must be > 0, got {self.deadline_s}")
+        if not 0 <= self.witnesses <= MAX_WITNESSES:
+            raise ValueError(f"witnesses must be in [0, {MAX_WITNESSES}], "
+                             f"got {self.witnesses}")
 
 
 @dataclass(frozen=True)
@@ -117,6 +134,8 @@ class Progress:
     cnt2_sum: int      # cumulative count accumulator
     estimate: float    # W * cnt2_sum / (2 * k_done)
     rse: float         # batch-means RSE over windows so far (inf if < 2)
+    # running top-n witness entries (None unless Request.witnesses > 0)
+    witnesses: tuple | None = None
 
 
 @dataclass
@@ -146,6 +165,9 @@ class Handle:
         self._error: BaseException | None = None
         self._progress: list[Progress] = []
         self._windows: list[tuple[int, int]] = []   # (S_i, k_i) batches
+        # witness reservoir merged across adaptive rounds (min-priority
+        # per edge-id tuple — the union equals one uninterrupted run's)
+        self._wit: dict = {}
         # resolved lazily at first drain
         self._motif: TemporalMotif | None = None
         self._tree: SpanningTree | None = None
@@ -212,9 +234,18 @@ class Handle:
         k_done = (j0 + n) * chunk
         W = int(job.wts.W_total)
         cnt2 = int(job.acc["cnt2"])
+        wit = None
+        if job.witnesses:
+            from ..core.engine import witness_entries
+            for eid_row, e in job.wit.items():
+                cur = self._wit.get(eid_row)
+                if cur is None or e["prio"] < cur["prio"]:
+                    self._wit[eid_row] = e
+            wit = witness_entries(self._wit, job.witnesses)
         self._progress.append(Progress(
             window=len(self._progress), k_done=k_done, cnt2_sum=cnt2,
-            estimate=W * cnt2 / (2.0 * k_done), rse=self._current_rse()))
+            estimate=W * cnt2 / (2.0 * k_done), rse=self._current_rse(),
+            witnesses=wit))
 
     def _current_rse(self) -> float:
         if self._wts is not None and int(self._wts.W_total) == 0:
@@ -405,7 +436,7 @@ class Session:
                 seed=int(cfg.seed if req.seed is None else req.seed),
                 tree=h._tree, wts=h._wts,
                 checkpoint_path=req.checkpoint_path, resume=h._resume,
-                deadline_t=h._deadline_t)
+                deadline_t=h._deadline_t, witnesses=int(req.witnesses))
             job.tree_select_s = h._tree_select_s
             handles.append(h)
             jobs.append(job)
@@ -421,6 +452,11 @@ class Session:
         still_growing: list[Handle] = []
         for h, job, res in zip(handles, jobs, results):
             res.rse = h._current_rse()
+            if h.request.witnesses:
+                # the engine result covers this round alone; answer with
+                # the handle's cross-round merged reservoir
+                from ..core.engine import witness_entries
+                res.witnesses = witness_entries(h._wit, h.request.witnesses)
             h._result = res
             if res.degraded:
                 # the engine stopped this job at its deadline — its

@@ -105,7 +105,8 @@ from ..dist.sharding import data_axes, n_data  # noqa: E402
 from ..util import get_shard_map  # noqa: E402
 from .estimator import _ACC_KEYS, EstimateResult, unbias_estimate  # noqa: E402
 from .motif import TemporalMotif  # noqa: E402
-from .sampler import make_batched_sample_fn, make_cohort_count_fn  # noqa: E402
+from .sampler import (WITNESS_SENTINEL, make_batched_sample_fn,  # noqa: E402
+                      make_cohort_count_fn, make_witness_fn)  # noqa: E402
 from .sampler import sampler_backend as _resolve_backend  # noqa: E402
 from .spanning_tree import SpanningTree, tree_signature  # noqa: E402
 from .weights import Weights  # noqa: E402
@@ -200,6 +201,62 @@ def make_engine_window_fn(trees, chunk: int, Lmax: int = 16,
 
 
 # ---------------------------------------------------------------------------
+# witness window programs (deterministic reservoir over accepted matches)
+# ---------------------------------------------------------------------------
+_WIT_KEYS = ("prio", "eids", "src", "dst", "t", "cnt2")
+
+
+def _witness_width(n: int) -> int:
+    """Pad the compiled reservoir width to a power of two (floor 4) so
+    nearby ``witnesses=`` values share one compiled program; the host
+    trims back to the requested count."""
+    return max(4, 1 << (int(n) - 1).bit_length())
+
+
+def make_witness_window_fn(tree, chunk: int, Lmax: int = 16,
+                           n_wit: int = 8, backend: str | None = None):
+    """``fn(dev, wts, base_key, j0, n, seed) -> dict``: scan chunks
+    ``j0 .. j0+n-1`` merging each chunk's witness reservoir
+    (``sampler.make_witness_fn``) into the window's top-``n_wit``.
+
+    Chunk ``j`` re-draws from ``fold_in(base_key, j)`` — the exact keys
+    the counting path used — so witnesses come from the same instance
+    stream the estimate counted.  Always runs UNSHARDED, on any mesh:
+    the reservoir merge is a pure function of the (seed, chunk)
+    priorities and the fixed chunk order, so the window's top-``n_wit``
+    is bit-identical across mesh shapes by construction (witness
+    dispatches move ``n_wit`` rows, not windows of samples — sharding
+    them would buy nothing).  ``seed`` is traced, so one compiled
+    program serves every job/tenant sharing ``(tree, chunk, Lmax,
+    n_wit, backend)``.
+    """
+    w_fn = make_witness_fn(tree, chunk, Lmax=Lmax, n_wit=n_wit,
+                           backend=backend)
+    S = tree.num_edges
+
+    def window(dev, wts, base_key, j0, n, seed):
+        def step(carry, j):
+            out = w_fn(dev, wts, jax.random.fold_in(base_key, j), j, seed)
+            prio = jnp.concatenate([carry["prio"], out["prio"]])
+            order = jnp.argsort(prio)[:n_wit]
+            merged = {kk: jnp.concatenate([carry[kk], out[kk]])[order]
+                      for kk in _WIT_KEYS}
+            return merged, None
+
+        init = dict(
+            prio=jnp.full((n_wit,), WITNESS_SENTINEL, jnp.int64),
+            eids=jnp.zeros((n_wit, S), jnp.int64),
+            src=jnp.zeros((n_wit, S), jnp.int64),
+            dst=jnp.zeros((n_wit, S), jnp.int64),
+            t=jnp.zeros((n_wit, S), jnp.int64),
+            cnt2=jnp.zeros((n_wit,), jnp.int64))
+        carry, _ = jax.lax.scan(step, init, j0 + jnp.arange(n))
+        return carry
+
+    return jax.jit(window, static_argnames=("n",))
+
+
+# ---------------------------------------------------------------------------
 # bounded LRU over compiled window programs (full plan key)
 # ---------------------------------------------------------------------------
 _WINDOW_FN_LRU: OrderedDict = OrderedDict()
@@ -226,6 +283,25 @@ def cached_window_fn(trees, chunk: int, Lmax: int = 16,
     if fn is None:
         fn = make_engine_window_fn(lanes, chunk, Lmax=Lmax, backend=key[3],
                                    mesh=mesh)
+        _WINDOW_FN_LRU[key] = fn
+    _WINDOW_FN_LRU.move_to_end(key)
+    while len(_WINDOW_FN_LRU) > _cache_capacity():
+        _WINDOW_FN_LRU.popitem(last=False)
+    return fn
+
+
+def cached_witness_fn(tree, chunk: int, Lmax: int = 16, n_wit: int = 8,
+                      backend: str | None = None):
+    """LRU-memoized ``make_witness_window_fn`` sharing ``_WINDOW_FN_LRU``
+    — the key's lane slot carries a ``"witness"`` marker plus the padded
+    reservoir width, so witness programs age with the count programs and
+    the ``no_retrace`` sentinel watches them for free."""
+    key = ((tree, "witness", int(n_wit)), int(chunk), int(Lmax),
+           _resolve_backend(backend), None)
+    fn = _WINDOW_FN_LRU.get(key)
+    if fn is None:
+        fn = make_witness_window_fn(tree, chunk, Lmax=Lmax, n_wit=n_wit,
+                                    backend=key[3])
         _WINDOW_FN_LRU[key] = fn
     _WINDOW_FN_LRU.move_to_end(key)
     while len(_WINDOW_FN_LRU) > _cache_capacity():
@@ -273,6 +349,13 @@ class EngineJob:
     # job stops at its last completed checkpoint window and returns a
     # partial result marked ``degraded`` (never an error)
     deadline_t: float | None = None
+    # witness capture: keep up to this many accepted full-match edge
+    # tuples (deterministic reservoir, ``sampler.witness_priority``).
+    # 0 = no witness dispatch at all (the count path never pays for it).
+    witnesses: int = 0
+    # merged witness reservoir, keyed by the edge-id tuple: the same
+    # match sampled in several chunks collapses to its best priority
+    wit: dict = field(default_factory=dict)
     # resolved by plan_jobs
     backend: str = "xla"
     fallback_reason: str = ""
@@ -340,6 +423,7 @@ class EngineStats:
     tree_cohorts: int = 0        # cohort windows dispatched
     cohort_motif_lanes: int = 0  # distinct motif lanes over those windows
     samples_shared: int = 0      # samples consumed without being redrawn
+    witness_dispatches: int = 0  # witness reservoir windows dispatched
 
     @property
     def motifs_per_cohort(self) -> float:
@@ -351,7 +435,7 @@ class EngineStats:
     def reset(self) -> None:
         self.dispatches = self.fused_dispatches = self.job_windows = 0
         self.tree_cohorts = self.cohort_motif_lanes = 0
-        self.samples_shared = 0
+        self.samples_shared = self.witness_dispatches = 0
 
 
 STATS = EngineStats()
@@ -556,6 +640,68 @@ def _run_cohort_window(plan, group, get_fn, cjobs, base_keys, j0, n):
                                        if job.fallback_reason else reason)
 
 
+def _run_witness_window(plan, group, job, j0, n) -> None:
+    """Dispatch one job's witness reservoir for a completed window and
+    merge the device top-``n_wit`` into ``job.wit``.
+
+    Guarded by ``job.witnesses > 0`` at the call site — a plain count
+    job never dispatches (or compiles) a witness program.  Transient
+    failures retry like count dispatches; ``job.wit`` is keyed by the
+    edge-id tuple at its best (smallest) priority, and is never trimmed
+    here — keeping every per-window survivor makes the merged reservoir
+    an exact union of per-window device tops, so an adaptive run split
+    into resume rounds merges to the same set as one uninterrupted run
+    at the final budget.
+    """
+    width = _witness_width(job.witnesses)
+    fn = cached_witness_fn(job.tree, plan.chunk, Lmax=plan.Lmax,
+                           n_wit=width, backend=job.backend)
+    last: Exception | None = None
+    for attempt in range(DISPATCH_POLICY.max_attempts):
+        try:
+            fire("engine.witness", tag=job.backend)
+            out = fn(plan.dev, group.wts, job.base_key, j0, n, job.seed)
+            out = {kk: np.asarray(out[kk]) for kk in _WIT_KEYS}
+            last = None
+            break
+        except Exception as e:
+            if not is_retryable(e):
+                raise
+            last = e
+            RSTATS.retries += 1
+            if attempt < DISPATCH_POLICY.max_attempts - 1:
+                time.sleep(backoff_delay(DISPATCH_POLICY, attempt,
+                                         seed=int(j0)))
+    if last is not None:
+        raise last
+    STATS.witness_dispatches += 1
+    # present edges in motif (pi) order, not tree-local order
+    rank_order = sorted(range(job.tree.num_edges),
+                        key=lambda s: job.tree.edge_ids[s])
+    for i in range(width):
+        p = int(out["prio"][i])
+        if p >= WITNESS_SENTINEL:
+            break                      # sorted: the rest are padding
+        eid_row = tuple(int(x) for x in out["eids"][i])
+        cur = job.wit.get(eid_row)
+        if cur is None or p < cur["prio"]:
+            job.wit[eid_row] = dict(
+                prio=p, cnt=int(out["cnt2"][i]),
+                edges=tuple((int(out["src"][i][s]), int(out["dst"][i][s]),
+                             int(out["t"][i][s])) for s in rank_order))
+
+
+def witness_entries(wit: dict, n: int) -> tuple:
+    """Format a merged witness reservoir as the public payload: up to
+    ``n`` entries ordered by reservoir priority, each
+    ``{"edges": ((src, dst, t), ...), "cnt": ..., "prio": ...}`` with
+    the tree's edges in motif (pi) order.  JSON-safe (tuples encode as
+    arrays) — the serving layers emit these dicts verbatim."""
+    top = sorted(wit.values(), key=lambda e: e["prio"])[:max(0, int(n))]
+    return tuple(dict(edges=e["edges"], cnt=e["cnt"], prio=e["prio"])
+                 for e in top)
+
+
 def _mark_deadline_expired(jobs, chunk) -> list:
     """Split off jobs whose deadline has passed; they stop at their last
     completed checkpoint window (cursor stays put).  Returns survivors."""
@@ -662,6 +808,8 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
                         job.acc[kk] += wsums[kk]
                     job.cursor = j0 + n
                     job.sampling_s += dt
+                    if job.witnesses:
+                        _run_witness_window(plan, group, job, j0, n)
                     if job.checkpoint_path:
                         _write_checkpoint(job, plan.chunk)
                     if on_window is not None:
@@ -689,5 +837,7 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
             tree_select_s=job.tree_select_s, sampler_backend=job.backend,
             fallback_reason=job.fallback_reason,
             mesh_shape=plan.mesh_shape, fused_jobs=job.group_size,
-            degraded=job.degraded, degrade_reason=job.degrade_reason))
+            degraded=job.degraded, degrade_reason=job.degrade_reason,
+            witnesses=(witness_entries(job.wit, job.witnesses)
+                       if job.witnesses else None)))
     return results

@@ -153,6 +153,79 @@ def make_cohort_count_fn(lane_trees, K: int, Lmax: int = 16,
     return fn
 
 
+# ---------------------------------------------------------------------------
+# witness extraction: deterministic per-chunk reservoir over accepted matches
+# ---------------------------------------------------------------------------
+#: int64 priority sentinel meaning "no accepted match in this slot" —
+#: reservoir rows carrying it are padding the host drops.
+WITNESS_SENTINEL = (1 << 63) - 1
+
+
+def splitmix64(x):
+    """Device-side splitmix64 finalizer over uint64 lanes — the same
+    bijective 64-bit hash as ``resilience.retry._splitmix64`` on the
+    host (uint64 arithmetic wraps mod 2^64, matching the host mask)."""
+    x = x + jnp.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    return x ^ (x >> jnp.uint64(31))
+
+
+def witness_priority(seed, j, K: int):
+    """Reservoir priorities for chunk ``j``: one int64 in
+    ``[0, WITNESS_SENTINEL)`` per sample position, a pure function of
+    ``(seed, chunk, position)`` — never the motif, cohort lane or mesh
+    shape (the det-cohort-key discipline, applied to witness selection),
+    so the surviving witnesses are bit-identical regardless of which
+    other motifs joined the job's cohort or how chunks were sharded."""
+    base = splitmix64(jnp.asarray(seed, jnp.uint64)
+                      ^ splitmix64(jnp.asarray(j, jnp.uint64)))
+    h = splitmix64(base ^ jnp.arange(K, dtype=jnp.uint64))
+    return jnp.minimum((h >> jnp.uint64(1)).astype(jnp.int64),
+                       WITNESS_SENTINEL - 1)
+
+
+def make_witness_fn(tree: SpanningTree, K: int, Lmax: int = 16,
+                    n_wit: int = 8, backend: str | None = None):
+    """``fn(dev, wts, key, j, seed) -> dict``: the chunk's top-``n_wit``
+    accepted full-match witnesses by deterministic reservoir priority.
+
+    The caller passes the SAME ``fold_in(base_key, j)`` key the counting
+    path uses for chunk ``j``, so the witness stream re-draws exactly the
+    instances the estimate counted — witness capture is execution-only
+    and the count path (and its accumulators) is never touched.  Samples
+    are scored with the tree's own count fn; the ``n_wit`` *accepted*
+    ones (``valid & ~overflow & cnt2 > 0``) with the smallest
+    ``witness_priority`` survive, rejected slots get the sentinel.
+
+    Returns ``prio [n]``, ``eids [n, S]`` (graph edge ids, tree-local
+    order), ``src``/``dst``/``t [n, S]`` (gathered on device so the host
+    pulls ``n_wit`` rows, never the full edge arrays) and ``cnt2 [n]``
+    (the DeriveCnt extension count of each witness's tree instance).
+    Unjitted (like ``make_sample_fn`` with ``guard=False``): the engine
+    embeds it in its jitted witness window scan.
+    """
+    from .validate import make_count_fn
+    s_fn = make_sample_fn(tree, K, backend=backend, guard=False)
+    c_fn = make_count_fn(tree, K, Lmax=Lmax)
+
+    def fn(dev, wts, key, j, seed):
+        samples = s_fn(dev, wts, key)
+        out = c_fn(dev, wts, samples)
+        accepted = out["valid"] & ~out["overflow"] & (out["cnt2"] > 0)
+        prio = jnp.where(accepted, witness_priority(seed, j, K),
+                         WITNESS_SENTINEL)
+        order = jnp.argsort(prio)[:n_wit]
+        E = samples["edges"][order]                     # [n_wit, S]
+        return dict(prio=prio[order], eids=E,
+                    src=dev["src"][E].astype(jnp.int64),
+                    dst=dev["dst"][E].astype(jnp.int64),
+                    t=dev["t"][E].astype(jnp.int64),
+                    cnt2=out["cnt2"][order].astype(jnp.int64))
+
+    return fn
+
+
 def _make_sample_fn_xla(tree: SpanningTree, K: int):
     """The XLA gather-chain sampler (exact int64 throughout)."""
     S = tree.num_edges

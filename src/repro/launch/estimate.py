@@ -134,6 +134,22 @@ def main() -> None:
                     help="with --serve: start on an EMPTY live graph and "
                          "accept ingest/advance/subscribe verbs "
                          "(repro.stream; --graph is ignored)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="with --serve: multi-tenant gateway — pool many "
+                         "graphs/streams in one process behind "
+                         "open_tenant/close_tenant verbs with overlapped "
+                         "drains (repro.gateway; --graph is ignored, "
+                         "tenants open over the wire)")
+    ap.add_argument("--max-tenants", type=int, default=8,
+                    help="gateway: tenant pool capacity (idle-LRU "
+                         "eviction past it)")
+    ap.add_argument("--tenant-quota", type=int, default=16,
+                    help="gateway: max pending work items per tenant; "
+                         "submits past it answer error_kind=overloaded")
+    ap.add_argument("--wal-dir", default=None, metavar="DIR",
+                    help="gateway: directory for per-tenant WAL files "
+                         "(enables '\"wal\": true' stream tenants; paths "
+                         "derive from the tenant name server-side)")
     ap.add_argument("--stream-replay", default=None, metavar="FILE",
                     help="replay an edge-list file (text/.gz/.npz) as a "
                          "live stream: ingest in batches, advance epochs, "
@@ -162,6 +178,14 @@ def main() -> None:
     if args.wal is not None and not (args.serve and args.stream):
         ap.error("--wal requires --serve --stream (the WAL logs the live "
                  "ingest/advance history)")
+    if args.gateway and not args.serve:
+        ap.error("--gateway requires --serve (it is a serving mode)")
+    if args.gateway and args.stream:
+        ap.error("--gateway pools graph AND stream tenants itself; open "
+                 "stream tenants over the wire instead of --stream")
+    if args.wal_dir is not None and not args.gateway:
+        ap.error("--wal-dir only applies to --serve --gateway (single-"
+                 "stream serving uses --wal PATH)")
     if args.devices:
         from .mesh import force_host_device_count
         force_host_device_count(args.devices)
@@ -170,6 +194,26 @@ def main() -> None:
     from ..core.motif import get_motif, is_motif_spec
 
     mesh = build_mesh(args.mesh)
+
+    if args.serve and args.gateway:
+        import sys
+
+        from ..api import EstimateConfig
+        from ..gateway import gateway_serve_loop
+        cfg = EstimateConfig(chunk=args.chunk, seed=args.seed,
+                             coalesce_window_s=args.coalesce_window,
+                             coalesce_max_requests=args.coalesce_max,
+                             sampler_backend=args.sampler_backend,
+                             depsum_backend=args.depsum_backend)
+        print(f"serving GATEWAY  max_tenants={args.max_tenants}  "
+              f"quota={args.tenant_quota}  wal_dir={args.wal_dir}  "
+              f"mesh={mesh.shape if mesh is not None else None}",
+              file=sys.stderr, flush=True)
+        served = gateway_serve_loop(cfg, max_tenants=args.max_tenants,
+                                    quota=args.tenant_quota,
+                                    wal_dir=args.wal_dir, mesh=mesh)
+        print(f"served {served} responses", file=sys.stderr)
+        return
 
     if args.serve and args.stream:
         import sys

@@ -7,7 +7,8 @@ other layers thread through:
 
 ``errors``
     The failure taxonomy — :func:`classify` maps any exception to
-    ``"retryable"`` / ``"fatal"`` / ``"bad_request"``; marker classes
+    ``"retryable"`` / ``"fatal"`` / ``"bad_request"`` /
+    ``"overloaded"``; marker classes
     (:class:`TransientError` etc.) let call sites pre-classify; and
     :func:`error_payload` is the ONE wire encoding of a failure (the
     serve loop's ``{"error": ..., "error_kind": ...}``).
@@ -37,15 +38,15 @@ preserve the bit-identity contract: chunk ``j`` always draws
 ``fold_in(base_key, j)`` and resumes from ``(chunks_done, acc)``.
 """
 from .atomic import atomic_write_json
-from .errors import (BAD_REQUEST, FATAL, RETRYABLE, BadRequestError,
-                     FatalError, TransientError, classify, error_payload,
-                     is_retryable)
+from .errors import (BAD_REQUEST, FATAL, OVERLOADED, RETRYABLE,
+                     BadRequestError, FatalError, OverloadedError,
+                     TransientError, classify, error_payload, is_retryable)
 from .faultinject import FaultInjector, FaultSpec, fire, seeded_hits
 from .retry import STATS, ResilienceStats, RetryPolicy, backoff_delays
 
 __all__ = [
-    "BAD_REQUEST", "FATAL", "RETRYABLE",
-    "BadRequestError", "FatalError", "TransientError",
+    "BAD_REQUEST", "FATAL", "OVERLOADED", "RETRYABLE",
+    "BadRequestError", "FatalError", "OverloadedError", "TransientError",
     "classify", "error_payload", "is_retryable",
     "FaultInjector", "FaultSpec", "fire", "seeded_hits",
     "STATS", "ResilienceStats", "RetryPolicy", "backoff_delays",

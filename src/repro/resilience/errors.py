@@ -11,6 +11,10 @@ Three kinds, chosen for what the caller should *do* next:
   ``ok: false``.
 * ``fatal`` — everything else (logic errors, assertion failures):
   never retried; surfaces to the caller.
+* ``overloaded`` — admission control shed the request before executing
+  it (a bounded per-tenant quota was full — the gateway's backpressure
+  seam).  The client backs off and resubmits; the server never retries
+  shed work itself, which is what distinguishes it from ``retryable``.
 
 :func:`classify` is the single decision point — the engine's retry
 ladder, ``train/fault_tolerance.py`` and the serve loop all consult it,
@@ -28,10 +32,19 @@ from __future__ import annotations
 RETRYABLE = "retryable"
 FATAL = "fatal"
 BAD_REQUEST = "bad_request"
+OVERLOADED = "overloaded"
 
 
 class TransientError(RuntimeError):
     """Marker: a fault the raiser already knows is worth retrying."""
+
+
+class OverloadedError(RuntimeError):
+    """Marker: the server shed this request at admission (a bounded
+    per-tenant quota was full — the gateway's backpressure seam).  The
+    request was never executed; the client should back off and resubmit,
+    but unlike ``retryable`` the *server* will not retry on its behalf.
+    """
 
 
 class FatalError(RuntimeError):
@@ -57,7 +70,10 @@ _TRANSIENT_STATUS = ("RESOURCE_EXHAUSTED", "UNAVAILABLE",
 
 
 def classify(exc: BaseException) -> str:
-    """Map an exception to ``retryable`` / ``fatal`` / ``bad_request``."""
+    """Map an exception to ``retryable`` / ``fatal`` / ``bad_request`` /
+    ``overloaded``."""
+    if isinstance(exc, OverloadedError):
+        return OVERLOADED
     if isinstance(exc, BadRequestError):
         return BAD_REQUEST
     if isinstance(exc, FatalError):

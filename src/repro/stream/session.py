@@ -57,6 +57,10 @@ class StandingQuery:
     each epoch, so the per-epoch estimate equals a cold ``estimate()``
     with that seed on the epoch's snapshot.  ``target_rse``/``k_max``
     make the per-epoch budget adaptive (session semantics).
+    ``witnesses=n`` asks every epoch's result for up to ``n`` accepted
+    full-match edge tuples (``EstimateResult.witnesses`` — the
+    deterministic reservoir, so same seed + same snapshot means the
+    same witnesses).
     """
 
     motif: TemporalMotif | str
@@ -66,6 +70,7 @@ class StandingQuery:
     target_rse: float | None = None
     k_max: int | None = None
     name: str | None = None
+    witnesses: int = 0
 
     def __post_init__(self) -> None:
         if isinstance(self.motif, str):
@@ -74,6 +79,10 @@ class StandingQuery:
             raise ValueError(f"k must be >= 1, got {self.k}")
         if self.delta < 0:
             raise ValueError(f"delta must be >= 0, got {self.delta}")
+        from ..api.session import MAX_WITNESSES
+        if not 0 <= self.witnesses <= MAX_WITNESSES:
+            raise ValueError(f"witnesses must be in [0, {MAX_WITNESSES}], "
+                             f"got {self.witnesses}")
 
     @property
     def label(self) -> str:
@@ -196,7 +205,7 @@ class StreamingSession:
             handles = self.session.submit_many([
                 Request(motif=q.motif, delta=int(q.delta), k=int(q.k),
                         seed=int(q.seed), target_rse=q.target_rse,
-                        k_max=q.k_max)
+                        k_max=q.k_max, witnesses=int(q.witnesses))
                 for _, q in items])
             for (qid, _), h in zip(items, handles):
                 results[qid] = h.result()
