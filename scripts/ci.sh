@@ -305,6 +305,79 @@ p.wait(timeout=60)
 print("gateway serve smoke OK")
 PYEOF
 
+# observability: the same gateway binary run at REPRO_OBS=trace must be
+# scrapable over the wire — the metrics verb answers inline mid-burst
+# (while drains run behind intake), the per-tenant latency histograms
+# appear once the burst completes, and the flight recorder holds one
+# connected intake -> drain -> dispatch -> emit span chain per request
+# under a single stable trace id, crossing the gateway's three threads
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_OBS=trace \
+  timeout 580 python - <<'PYEOF'
+import json, subprocess, sys
+
+p = subprocess.Popen(
+    [sys.executable, "-m", "repro.launch.estimate", "--serve", "--gateway",
+     "--chunk", "256", "--max-tenants", "2"],
+    stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+    stderr=subprocess.DEVNULL, text=True)
+
+def send(obj):
+    p.stdin.write(json.dumps(obj) + "\n")
+    p.stdin.flush()
+
+send({"cmd": "open_tenant", "tenant": "fin",
+      "graph": "fintxn:n_accounts=60,m=1200,time_span=40000,seed=3"})
+for i in (1, 2):
+    send({"tenant": "fin", "id": i, "motif": "M4-2", "delta": 2000,
+          "k": 512})
+send({"cmd": "metrics"})          # mid-burst: answered inline, no drain
+
+rs = []
+def have(pred):
+    return any(pred(r) for r in rs)
+while not (have(lambda r: r.get("id") == 2 and not r.get("progress"))
+           and have(lambda r: r.get("cmd") == "metrics")):
+    rs.append(json.loads(p.stdout.readline()))
+mid = next(r for r in rs if r.get("cmd") == "metrics")
+assert mid["ok"] and mid["content_type"].startswith("text/plain"), mid
+# engine counters may not be declared yet mid-burst (the engine imports
+# on the dispatcher's first drain) — the always-on series must be
+assert "# TYPE repro_resilience_retries_total counter" in mid["text"]
+assert "# TYPE repro_stage_seconds histogram" in mid["text"]
+
+def call(obj):
+    send(obj)
+    return json.loads(p.stdout.readline())
+
+# the stats response is emitted AFTER both finals' emit spans closed, so
+# once it is read the recorder holds the complete chains
+st = call({"cmd": "stats"})
+assert st["ok"] and st["obs"]["level"] == "trace", st
+
+post = call({"cmd": "metrics"})
+assert "# TYPE repro_engine_dispatches_total counter" in post["text"]
+assert "repro_tenant_request_seconds_bucket" in post["text"]
+assert 'tenant="fin"' in post["text"]
+assert "repro_stage_seconds_bucket" in post["text"]
+
+tr = call({"cmd": "trace"})
+assert tr["ok"] and tr["level"] == "trace" and tr["count"] > 0, tr
+intakes = [r for r in tr["spans"] if r["name"] == "gateway.intake"
+           and r.get("attrs", {}).get("id") == 1]
+assert intakes, [r["name"] for r in tr["spans"]]
+tid = intakes[0]["trace"]
+chain = [r for r in tr["spans"] if r["trace"] == tid]
+names = {r["name"] for r in chain}
+assert {"gateway.intake", "session.drain", "engine.dispatch",
+        "gateway.emit"} <= names, names
+assert len({r["thread"] for r in chain}) >= 3, chain   # 3 threads, 1 id
+
+quit_r = call({"cmd": "quit"})
+assert quit_r["served"] == 2, quit_r
+p.wait(timeout=60)
+print("obs gateway smoke OK")
+PYEOF
+
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite batch --fast
@@ -322,4 +395,6 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python -m benchmarks.run --suite resilience --fast
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suite gateway --fast
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suite obs --fast
 fi

@@ -1,6 +1,6 @@
 """Contract linter + retrace sentinel — the repo's invariants as checks.
 
-This package is the canonical statement of the three contracts every
+This package is the canonical statement of the contracts every
 TIMEST layer must honor, and the machinery that enforces them in CI
 (``scripts/ci.sh`` runs the linter as its first, fast-fail gate):
 
@@ -32,6 +32,15 @@ TIMEST layer must honor, and the machinery that enforces them in CI
     ``det-host-rng``); and weight/count accumulators stay exact int64
     unless the module carries the ``_F32_EXACT_MAX`` (2^24) guard that
     makes an f32 excursion provably exact (``exact-narrowing-cast``).
+
+**4. Clock discipline in instrumented layers** (family ``observability``)
+    The layers the telemetry stack instruments (``repro/obs/``,
+    ``repro/gateway/``, ``repro/core/engine.py``) read the clock only
+    through the ``repro.obs`` seam — ``obs.monotonic`` for deadlines,
+    ``obs.span`` for timed regions (``obs-span-discipline``).  A raw
+    ``time.monotonic()``/``perf_counter()`` read there is a shadow
+    timing path the metrics registry and flight recorder cannot see.
+    ``time.sleep`` stays legal: the rule bans clock reads, not waiting.
 
 **Running it**::
 

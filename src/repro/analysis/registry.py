@@ -26,6 +26,10 @@ DETERMINISM_SCOPES = ESTIMATOR_SCOPES + ("repro/stream/",)
 # classified through the resilience taxonomy (rule resilience-bare-except)
 RESILIENCE_SCOPES = ("repro/api/", "repro/stream/", "repro/resilience/",
                      "repro/gateway/")
+# instrumented layers where clock reads must go through the repro.obs
+# seam (rule obs-span-discipline; repro/obs/ itself is the seam and is
+# exempted inside the rule)
+OBS_SCOPES = ("repro/obs/", "repro/gateway/", "repro/core/engine.py")
 EVERYWHERE = ("",)
 
 # pseudo-rule for malformed suppression comments; never suppressible

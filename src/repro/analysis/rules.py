@@ -1,4 +1,4 @@
-"""The four contract-rule families (see ``analysis/__init__`` for the
+"""The contract-rule families (see ``analysis/__init__`` for the
 policy guide; each rule documents the hazard that motivated it).
 
 Every rule is a pure function ``check(module) -> [Finding]`` over the
@@ -16,7 +16,8 @@ import ast
 import re
 
 from .registry import (DETERMINISM_SCOPES, ENV_SEAM_REGISTRY,
-                       ESTIMATOR_SCOPES, RESILIENCE_SCOPES, register)
+                       ESTIMATOR_SCOPES, OBS_SCOPES, RESILIENCE_SCOPES,
+                       register)
 from .report import Finding
 
 
@@ -599,4 +600,57 @@ def check_bare_except(mod) -> list:
             "is_retryable() on the exception (or re-raise) so "
             "retryable faults reach the retry ladder and fatal ones "
             "surface"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# family: observability
+# ---------------------------------------------------------------------------
+_OBS_SEAM = "repro/obs/"
+_CLOCK_FNS = {"time", "time_ns", "monotonic", "monotonic_ns",
+              "perf_counter", "perf_counter_ns"}
+
+
+@register(
+    "obs-span-discipline", "observability",
+    "instrumented serving layers read the clock only through the "
+    "repro.obs seam (obs.monotonic / obs.span): a raw time.monotonic()/"
+    "perf_counter() read is a shadow timing path the metrics registry "
+    "and flight recorder cannot see, so stage latencies silently "
+    "diverge from the spans that claim to measure them.  time.sleep "
+    "stays legal — the rule bans clock READS, not waiting.",
+    scope=OBS_SCOPES)
+def check_span_discipline(mod) -> list:
+    if _OBS_SEAM in mod.posix:
+        return []                  # repro/obs/ IS the sanctioned seam
+    out: list = []
+    time_aliases = {"time"}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time":
+                    time_aliases.add(a.asname or a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module == "time":
+            clocks = sorted(a.name for a in node.names
+                            if a.name in _CLOCK_FNS)
+            if clocks:
+                out.append(_find(
+                    "obs-span-discipline", mod, node,
+                    f"from time import {', '.join(clocks)} in an "
+                    "instrumented layer: import the clock from repro.obs "
+                    "(obs.monotonic / obs.perf_counter) so every timing "
+                    "read shares the seam the spans and stage histograms "
+                    "use"))
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _dotted_chain(node.func)
+        if (len(chain) == 2 and chain[0] in time_aliases
+                and chain[1] in _CLOCK_FNS):
+            out.append(_find(
+                "obs-span-discipline", mod, node,
+                f"{'.'.join(chain)}() in an instrumented layer: read the "
+                "clock through repro.obs (obs.monotonic, or wrap the "
+                "region in obs.span) — a raw clock read is a shadow "
+                "timing path the registry/flight recorder cannot see"))
     return out

@@ -27,9 +27,18 @@ Control lines: ``{"cmd": "stats"}`` (session counters plus an
 how much sample-stream sharing the standing queries achieve), ``{"cmd":
 "health"}`` (liveness probe, answered IMMEDIATELY without draining the
 coalescing window: mode, pending/served counts, process-wide resilience
-counters, the same ``engine`` block, and in stream mode the current
-epoch + WAL position), ``{"cmd": "quit"}`` (drain + exit; EOF does the
-same).
+counters, the same ``engine`` block, an ``obs`` telemetry block, and in
+stream mode the current epoch + WAL position), ``{"cmd": "quit"}``
+(drain + exit; EOF does the same).
+
+Telemetry verbs (see ``repro.obs`` — the canonical observability
+guide): ``{"cmd": "metrics"}`` answers the full registry as Prometheus
+text exposition in the ``text`` field; ``{"cmd": "trace"}`` exports the
+flight-recorder ring (host-side spans; populated when ``REPRO_OBS=
+trace``) as a ``spans`` list — one NDJSON record each; ``{"cmd":
+"profile", "windows": n}`` arms a one-shot ``jax.profiler`` capture
+around the next n engine window dispatches (requires the server to be
+launched with ``--profile-dir``; the wire must not name server paths).
 
 Streaming verbs (``--serve --stream``; ``serve_loop(..., stream=...)``)::
 
@@ -76,6 +85,7 @@ import math
 import sys
 from typing import IO
 
+from .. import obs
 from ..gateway.io import LineSource as _LineSource
 from ..resilience import classify, error_payload, fire
 from ..resilience.retry import STATS as RSTATS
@@ -146,6 +156,37 @@ def _engine_stats() -> dict:
                 witness_dispatches=ESTATS.witness_dispatches)
 
 
+def _metrics() -> dict:
+    """The ``metrics`` verb: full registry as Prometheus text exposition
+    (one NDJSON response; scrapers unwrap the ``text`` field)."""
+    return dict(ok=True, cmd="metrics",
+                content_type="text/plain; version=0.0.4",
+                text=obs.REGISTRY.prometheus_text())
+
+
+def _trace_export() -> dict:
+    """The ``trace`` verb: the flight recorder's span ring, oldest first
+    (each entry is one NDJSON record of the ``--trace-out`` export)."""
+    recs = obs.RECORDER.records()
+    return dict(ok=True, cmd="trace", level=obs.level_name(),
+                count=len(recs), recorded=obs.RECORDER.recorded,
+                ring=obs.RECORDER.capacity, spans=recs)
+
+
+def _profile(obj: dict, profile_dir: str | None) -> dict:
+    """The ``profile`` verb: arm a jax.profiler capture around the next
+    N engine window dispatches.  The capture directory comes from the
+    server's ``--profile-dir`` flag — the wire never names server paths."""
+    if profile_dir is None:
+        return dict(ok=False, cmd="profile",
+                    error="server started without --profile-dir")
+    try:
+        st = obs.arm_profile(int(obj.get("windows") or 1), profile_dir)
+    except (ValueError, RuntimeError, TypeError) as e:
+        return dict(ok=False, cmd="profile", error=str(e))
+    return dict(ok=True, cmd="profile", **st)
+
+
 def _stats(session: Session | None, stream=None) -> dict:
     d = dict(ok=True, cmd="stats")
     if session is not None:
@@ -161,7 +202,7 @@ def _stats(session: Session | None, stream=None) -> dict:
                  queries_run=ss.queries_run, ingested=st.ingested,
                  buffered=stream.store.buffered, evicted=st.evicted,
                  dropped=st.dropped, compactions=st.compactions)
-    d.update(engine=_engine_stats())
+    d.update(engine=_engine_stats(), obs=obs.summary())
     return d
 
 
@@ -175,7 +216,7 @@ def _health(stream, n_pending: int, served: int) -> dict:
              mode="plain" if stream is None else "stream",
              pending=n_pending, served=served,
              resilience=RSTATS.as_dict(),
-             engine=_engine_stats())
+             engine=_engine_stats(), obs=obs.summary())
     if stream is not None:
         st = stream.store
         d.update(epoch=st.epoch, buffered=st.buffered)
@@ -218,14 +259,22 @@ def _sub_response(qid: int, query, epoch_idx: int, res) -> dict:
 
 
 def serve_loop(session: Session | None, infile: IO = None,
-               outfile: IO = None, stream=None) -> int:
+               outfile: IO = None, stream=None,
+               profile_dir: str | None = None) -> int:
     """Run the NDJSON request/response loop until EOF or ``quit``.
 
     ``stream`` (a ``repro.stream.StreamingSession``) enables the
     streaming verbs; the resident estimation session is then the stream's
     current-epoch session (swapped on every ``advance``) and ``session``
-    must be None.  Returns the number of estimation requests answered
-    (standing-query epoch responses included).
+    must be None.  ``profile_dir`` enables the ``profile`` verb (the
+    jax.profiler capture directory — CLI ``--profile-dir``).  Returns
+    the number of estimation requests answered (standing-query epoch
+    responses included).
+
+    Observability (``REPRO_OBS``, see ``repro.obs``): each request line
+    mints a trace id at intake; the intake parse/submit, session drain,
+    engine dispatches and response emits all record spans under it, so
+    one request yields a connected chain in the ``trace`` export.
     """
     if (session is None) == (stream is None):
         raise ValueError("serve_loop needs exactly one of session/stream")
@@ -241,8 +290,9 @@ def serve_loop(session: Session | None, infile: IO = None,
     def emit(obj: dict) -> None:
         try:
             fire("serve.write")
-            out.write(json.dumps(obj) + "\n")
-            out.flush()
+            with obs.span("serve.emit", stage="emit"):
+                out.write(json.dumps(obj) + "\n")
+                out.flush()
         except Exception as e:
             # a client that hung up mid-response must not kill the
             # server; the loss is counted and classified for health
@@ -262,10 +312,12 @@ def serve_loop(session: Session | None, infile: IO = None,
             sys.stderr.write(f"serve: window drain failed "
                              f"({classify(e)}): {e}\n")
         for rid, h in pending:
-            try:
-                emit(_response(rid, h))
-            except Exception as e:       # noqa: BLE001 — server stays up
-                emit(dict(id=rid, ok=False, **error_payload(e)))
+            # the response emit belongs to the request's trace
+            with obs.trace_context(h._trace):
+                try:
+                    emit(_response(rid, h))
+                except Exception as e:   # noqa: BLE001 — server stays up
+                    emit(dict(id=rid, ok=False, **error_payload(e)))
             served += 1
         pending.clear()
 
@@ -326,6 +378,12 @@ def serve_loop(session: Session | None, infile: IO = None,
             emit(_stats(cur_session(), stream))
         elif cmd == "health":
             emit(_health(stream, len(pending), served))
+        elif cmd == "metrics":
+            emit(_metrics())
+        elif cmd == "trace":
+            emit(_trace_export())
+        elif cmd == "profile":
+            emit(_profile(obj, profile_dir))
         elif cmd in ("ingest", "advance", "subscribe", "unsubscribe"):
             if stream is None:
                 emit(dict(ok=False, error=f"cmd {cmd!r} needs stream mode "
@@ -376,18 +434,25 @@ def serve_loop(session: Session | None, infile: IO = None,
             emit(dict(ok=False, error=f"unknown cmd {cmd!r}"))
         else:
             rid = obj.get("id")
+            # one trace id per request wire line, minted at intake; the
+            # handle inherits it (ambient context) and every downstream
+            # span — drain, dispatch, emit — reports it
+            tid = obs.new_trace() if obs.enabled(obs.TRACE) else None
             try:
-                req = _parse_request(obj)
-                # validate the motif before it reaches the drain, so the
-                # error answers THIS line instead of poisoning the window
-                if isinstance(req.motif, str):
-                    from ..core.motif import get_motif
-                    get_motif(req.motif)
-                s = cur_session()
-                if s is None:
-                    raise RuntimeError("no epoch materialized yet — send "
-                                       "ingest + advance first")
-                pending.append((rid, s.submit(req)))
+                with obs.trace_context(tid), \
+                        obs.span("serve.intake", stage="intake", id=rid):
+                    req = _parse_request(obj)
+                    # validate the motif before it reaches the drain, so
+                    # the error answers THIS line instead of poisoning
+                    # the window
+                    if isinstance(req.motif, str):
+                        from ..core.motif import get_motif
+                        get_motif(req.motif)
+                    s = cur_session()
+                    if s is None:
+                        raise RuntimeError("no epoch materialized yet — "
+                                           "send ingest + advance first")
+                    pending.append((rid, s.submit(req)))
                 if s.window_age() is None:          # count-closed mid-add
                     drain()
             except Exception as e:       # noqa: BLE001

@@ -46,10 +46,10 @@ never redrawn.
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass
 from typing import Iterator, Sequence
 
+from .. import obs
 from ..core.batch import BatchPlanner
 from ..core.estimator import EstimateResult
 from ..core.graph import TemporalGraph
@@ -175,10 +175,16 @@ class Handle:
         self._tree_select_s = 0.0
         self._k_total = int(request.k)
         self._resume: tuple[int, dict] | None = None
+        # obs identity: inherit the ambient trace (gateway/serve intake
+        # minted one) or mint here — Session.submit is an intake point
+        self._trace = obs.current_trace() or (
+            obs.new_trace() if obs.enabled(obs.TRACE) else None)
+        self._submit_t = obs.monotonic()
+        self._queue_wait_seen = False
         # absolute monotonic deadline, fixed at SUBMIT time (coalescing
         # wait and fused siblings' work all count against it)
         self._deadline_t = (None if request.deadline_s is None
-                            else time.monotonic() + request.deadline_s)
+                            else obs.monotonic() + request.deadline_s)
 
     # -- public surface --------------------------------------------------
     def result(self) -> EstimateResult:
@@ -242,10 +248,15 @@ class Handle:
                 if cur is None or e["prio"] < cur["prio"]:
                     self._wit[eid_row] = e
             wit = witness_entries(self._wit, job.witnesses)
+        rse = self._current_rse()
         self._progress.append(Progress(
             window=len(self._progress), k_done=k_done, cnt2_sum=cnt2,
-            estimate=W * cnt2 / (2.0 * k_done), rse=self._current_rse(),
+            estimate=W * cnt2 / (2.0 * k_done), rse=rse,
             witnesses=wit))
+        if obs.enabled(obs.TRACE):
+            # per-request RSE-vs-samples trajectory point (flight recorder)
+            obs.event("request.window", trace=self._trace, k_done=k_done,
+                      cnt2=cnt2, rse=(rse if math.isfinite(rse) else None))
 
     def _current_rse(self) -> float:
         if self._wts is not None and int(self._wts.W_total) == 0:
@@ -331,14 +342,14 @@ class Session:
         if self._closed:
             raise RuntimeError("Session is closed")
         if (self._pending
-                and time.monotonic() - self._window_opened
+                and obs.monotonic() - self._window_opened
                 >= self.config.coalesce_window_s):
             self.flush()                       # time-closed window
         if not self._pending:
             # fresh clock read: a flush above ran the previous window's
             # whole computation, so reusing its pre-flush timestamp would
             # open this window already stale and defeat coalescing
-            self._window_opened = time.monotonic()
+            self._window_opened = obs.monotonic()
         handle = Handle(self, request)
         self._pending.append(handle)
         self.stats.submitted += 1
@@ -356,7 +367,7 @@ class Session:
             raise RuntimeError("Session is closed")
         handles = [Handle(self, r) for r in requests]
         if not self._pending:
-            self._window_opened = time.monotonic()
+            self._window_opened = obs.monotonic()
         self._pending.extend(handles)
         self.stats.submitted += len(handles)
         return handles
@@ -366,7 +377,7 @@ class Session:
         nothing is pending) — serve loops poll this to time-close."""
         if not self._pending:
             return None
-        return time.monotonic() - self._window_opened
+        return obs.monotonic() - self._window_opened
 
     def sample_matches(self, specs: Sequence, K: int,
                        seed: int | None = None) -> list[dict]:
@@ -394,31 +405,34 @@ class Session:
             return
         self.stats.drains += 1
         active = pending
-        try:
-            while active:
-                active = self._run_round(active)
-        except BaseException as e:
-            for h in pending:
-                if not h.done:
-                    h._error = e
-                    h.done = True
-            raise
+        with obs.span("session.drain", stage="drain",
+                      trace=pending[0]._trace, requests=len(pending)):
+            try:
+                while active:
+                    active = self._run_round(active)
+            except BaseException as e:
+                for h in pending:
+                    if not h.done:
+                        h._error = e
+                        h.done = True
+                raise
 
     def _resolve_plan(self, h: Handle) -> None:
         """Tree + weights for a handle (cached across growth rounds)."""
         if h._tree is not None:
             return
         req = h.request
-        t0 = time.perf_counter()
-        h._motif = (get_motif(req.motif) if isinstance(req.motif, str)
-                    else req.motif)
-        if req.tree is not None:
-            h._tree = req.tree
-            h._wts = (req.wts if req.wts is not None
-                      else self.planner.weights_for(req.tree, req.delta))
-        else:
-            h._tree, h._wts = self.planner.plan(h._motif, req.delta)
-        h._tree_select_s = time.perf_counter() - t0
+        with obs.span("session.preprocess", stage="preprocess",
+                      trace=h._trace) as sp:
+            h._motif = (get_motif(req.motif) if isinstance(req.motif, str)
+                        else req.motif)
+            if req.tree is not None:
+                h._tree = req.tree
+                h._wts = (req.wts if req.wts is not None
+                          else self.planner.weights_for(req.tree, req.delta))
+            else:
+                h._tree, h._wts = self.planner.plan(h._motif, req.delta)
+        h._tree_select_s = sp.elapsed_s
 
     def _run_round(self, active: list[Handle]) -> list[Handle]:
         """One engine pass over ``active`` handles; returns the handles
@@ -428,6 +442,12 @@ class Session:
         cfg = self.config
         handles, jobs = [], []
         for h in active:
+            if obs.enabled() and not h._queue_wait_seen:
+                # submit -> first drain: coalescing + queueing latency
+                h._queue_wait_seen = True
+                obs.observe_stage("queue_wait",
+                                  obs.monotonic() - h._submit_t,
+                                  trace=h._trace)
             self._resolve_plan(h)
             req = h.request
             job = EngineJob(
@@ -436,7 +456,8 @@ class Session:
                 seed=int(cfg.seed if req.seed is None else req.seed),
                 tree=h._tree, wts=h._wts,
                 checkpoint_path=req.checkpoint_path, resume=h._resume,
-                deadline_t=h._deadline_t, witnesses=int(req.witnesses))
+                deadline_t=h._deadline_t, witnesses=int(req.witnesses),
+                trace=h._trace)
             job.tree_select_s = h._tree_select_s
             handles.append(h)
             jobs.append(job)
@@ -475,7 +496,7 @@ class Session:
                 if (h.request.target_rse is not None
                         and h._deadline_t is not None
                         and h._current_rse() > h.request.target_rse
-                        and time.monotonic() >= h._deadline_t):
+                        and obs.monotonic() >= h._deadline_t):
                     # target unmet but the deadline vetoed further
                     # growth rounds: report the partial as degraded
                     res.degraded = True
@@ -495,7 +516,7 @@ class Session:
         target = h.request.target_rse
         if target is None or h._current_rse() <= target:
             return False
-        if h._deadline_t is not None and time.monotonic() >= h._deadline_t:
+        if h._deadline_t is not None and obs.monotonic() >= h._deadline_t:
             return False
         cap_chunks = max(1, -(-h._k_cap() // self.config.chunk))
         return job.cursor < cap_chunks

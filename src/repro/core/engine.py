@@ -87,6 +87,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any
 
+from .. import obs
 from ..knobs import get_knob
 from ..resilience import STATS as RSTATS
 from ..resilience import atomic_write_json, classify, fire, is_retryable
@@ -261,6 +262,21 @@ def make_witness_window_fn(tree, chunk: int, Lmax: int = 16,
 # ---------------------------------------------------------------------------
 _WINDOW_FN_LRU: OrderedDict = OrderedDict()
 
+# registry-backed LRU accounting: monotonic across clear_window_cache()
+# (the cache clears; the counters never do — scrape deltas stay meaningful)
+_LRU_EVENTS = obs.REGISTRY.counter(
+    "repro_engine_window_lru_total",
+    "compiled window-program LRU lookups by cache and event",
+    labels=("cache", "event"))
+_LRU_WINDOW_HIT = _LRU_EVENTS.labels(cache="window", event="hit")
+_LRU_WINDOW_MISS = _LRU_EVENTS.labels(cache="window", event="miss")
+_LRU_WITNESS_HIT = _LRU_EVENTS.labels(cache="witness", event="hit")
+_LRU_WITNESS_MISS = _LRU_EVENTS.labels(cache="witness", event="miss")
+
+_SAMPLES_PER_S = obs.REGISTRY.gauge(
+    "repro_sampler_samples_per_s",
+    "sampler throughput over the most recent cohort window dispatch")
+
 
 def _cache_capacity() -> int:
     return max(1, get_knob("REPRO_ENGINE_CACHE"))
@@ -281,9 +297,12 @@ def cached_window_fn(trees, chunk: int, Lmax: int = 16,
     key = (lanes, int(chunk), int(Lmax), _resolve_backend(backend), mesh)
     fn = _WINDOW_FN_LRU.get(key)
     if fn is None:
+        _LRU_WINDOW_MISS.inc()
         fn = make_engine_window_fn(lanes, chunk, Lmax=Lmax, backend=key[3],
                                    mesh=mesh)
         _WINDOW_FN_LRU[key] = fn
+    else:
+        _LRU_WINDOW_HIT.inc()
     _WINDOW_FN_LRU.move_to_end(key)
     while len(_WINDOW_FN_LRU) > _cache_capacity():
         _WINDOW_FN_LRU.popitem(last=False)
@@ -300,9 +319,12 @@ def cached_witness_fn(tree, chunk: int, Lmax: int = 16, n_wit: int = 8,
            _resolve_backend(backend), None)
     fn = _WINDOW_FN_LRU.get(key)
     if fn is None:
+        _LRU_WITNESS_MISS.inc()
         fn = make_witness_window_fn(tree, chunk, Lmax=Lmax, n_wit=n_wit,
                                     backend=key[3])
         _WINDOW_FN_LRU[key] = fn
+    else:
+        _LRU_WITNESS_HIT.inc()
     _WINDOW_FN_LRU.move_to_end(key)
     while len(_WINDOW_FN_LRU) > _cache_capacity():
         _WINDOW_FN_LRU.popitem(last=False)
@@ -310,7 +332,11 @@ def cached_witness_fn(tree, chunk: int, Lmax: int = 16, n_wit: int = 8,
 
 
 def clear_window_cache() -> None:
-    """Drop every cached window program (tests/benchmark cold starts)."""
+    """Drop every cached window program (tests/benchmark cold starts).
+
+    Clears the CACHE only: the registry-backed counters (``STATS``,
+    LRU hit/miss) are monotonic and survive — scrapers never see a
+    counter move backwards because a test dropped compiled programs."""
     _WINDOW_FN_LRU.clear()
 
 
@@ -375,6 +401,10 @@ class EngineJob:
     # tree-cohort coordinates, resolved by plan_jobs: the job reads cell
     # ``[stream(seed), lane]`` of its cohort's window sums
     lane: int = 0
+    # obs trace id of the request that planned this job (None when the
+    # caller runs untraced); dispatch spans report it so a request's
+    # flight-recorder chain reaches the engine
+    trace: str | None = None
     # timings (tree_select_s/preprocess_s are filled by the front-ends)
     sampling_s: float = 0.0
     preprocess_s: float = 0.0
@@ -412,18 +442,37 @@ class ExecutionPlan:
         return tuple(int(self.mesh.shape[a]) for a in self.mesh.axis_names)
 
 
-@dataclass
-class EngineStats:
-    """Process-wide dispatch accounting (tests assert on these)."""
+class EngineStats(obs.CounterBlock):
+    """Process-wide dispatch accounting (tests assert on these) — a
+    registry-backed :class:`repro.obs.registry.CounterBlock` facade.
+    The attribute API is unchanged (``STATS.dispatches += 1`` etc.) but
+    each field is a monotonic registry counter
+    (``repro_engine_*_total``) that also appears in the
+    ``{"cmd": "metrics"}`` Prometheus scrape and survives
+    ``clear_window_cache()``; ``reset()`` is a test-only seam.
 
-    dispatches: int = 0         # compiled window programs launched
-    fused_dispatches: int = 0   # dispatches carrying more than one job
-    job_windows: int = 0        # job x window pairs covered
-    # tree-cohort fan-out accounting (shared-sample multi-motif serving)
-    tree_cohorts: int = 0        # cohort windows dispatched
-    cohort_motif_lanes: int = 0  # distinct motif lanes over those windows
-    samples_shared: int = 0      # samples consumed without being redrawn
-    witness_dispatches: int = 0  # witness reservoir windows dispatched
+    ``dispatches``          compiled window programs launched
+    ``fused_dispatches``    dispatches carrying more than one job
+    ``job_windows``         job x window pairs covered
+    ``tree_cohorts``        cohort windows dispatched
+    ``cohort_motif_lanes``  distinct motif lanes over those windows
+    ``samples_shared``      samples consumed without being redrawn
+    ``witness_dispatches``  witness reservoir windows dispatched
+    """
+
+    _PREFIX = "repro_engine"
+    _FIELDS = ("dispatches", "fused_dispatches", "job_windows",
+               "tree_cohorts", "cohort_motif_lanes", "samples_shared",
+               "witness_dispatches")
+    _DOCS = {
+        "dispatches": "compiled window programs launched",
+        "fused_dispatches": "dispatches carrying more than one job",
+        "job_windows": "job x window pairs covered",
+        "tree_cohorts": "cohort windows dispatched",
+        "cohort_motif_lanes": "distinct motif lanes over cohort windows",
+        "samples_shared": "samples consumed without being redrawn",
+        "witness_dispatches": "witness reservoir windows dispatched",
+    }
 
     @property
     def motifs_per_cohort(self) -> float:
@@ -431,11 +480,6 @@ class EngineStats:
         if not self.tree_cohorts:
             return 0.0
         return self.cohort_motif_lanes / self.tree_cohorts
-
-    def reset(self) -> None:
-        self.dispatches = self.fused_dispatches = self.job_windows = 0
-        self.tree_cohorts = self.cohort_motif_lanes = 0
-        self.samples_shared = self.witness_dispatches = 0
 
 
 STATS = EngineStats()
@@ -564,9 +608,12 @@ def _attempt_dispatch(window_fn, plan, wts, base_keys, j0, n, backend):
     for attempt in range(DISPATCH_POLICY.max_attempts):
         try:
             fire("engine.dispatch", tag=backend)
-            sums = window_fn(plan.dev, wts, base_keys, j0, n)
-            # materialize inside the try: device faults can surface here
-            return {kk: np.asarray(sums[kk]) for kk in _ACC_KEYS}
+            with obs.span("engine.device", stage="device",
+                          backend=backend, j0=int(j0), n=int(n)):
+                sums = window_fn(plan.dev, wts, base_keys, j0, n)
+                # materialize inside the try: device faults surface here
+                sums = {kk: np.asarray(sums[kk]) for kk in _ACC_KEYS}
+            return sums
         except Exception as e:
             if not is_retryable(e):
                 raise
@@ -705,7 +752,7 @@ def witness_entries(wit: dict, n: int) -> tuple:
 def _mark_deadline_expired(jobs, chunk) -> list:
     """Split off jobs whose deadline has passed; they stop at their last
     completed checkpoint window (cursor stays put).  Returns survivors."""
-    now = time.monotonic()
+    now = obs.monotonic()
     live = []
     for job in jobs:
         if job.deadline_t is not None and now >= job.deadline_t:
@@ -788,10 +835,24 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
                         keys.append(job.base_key)
                 pad = group.n_streams - len(keys)
                 base_keys = jnp.stack(keys + [keys[0]] * pad)
-                t0 = time.perf_counter()
-                sums, n_disp = _run_cohort_window(plan, group, get_fn,
-                                                  cjobs, base_keys, j0, n)
-                dt = time.perf_counter() - t0
+                profiling = obs.profile_armed()
+                if profiling:
+                    obs.profile_window_start()
+                with obs.span("engine.dispatch", stage="dispatch",
+                              trace=cjobs[0].trace,
+                              backend=cjobs[0].backend, j0=int(j0),
+                              n=int(n), jobs=len(cjobs),
+                              streams=len(keys), rung=cjobs[0].max_window,
+                              plan_key=str(group.key.signature)) as sp:
+                    sums, n_disp = _run_cohort_window(plan, group, get_fn,
+                                                      cjobs, base_keys,
+                                                      j0, n)
+                    sp.set(dispatches=n_disp, backend=cjobs[0].backend)
+                if profiling:
+                    obs.profile_window_end()
+                dt = sp.elapsed_s
+                if obs.enabled() and dt > 0:
+                    _SAMPLES_PER_S.set(plan.chunk * n * len(keys) / dt)
                 plan.dispatches += n_disp
                 STATS.dispatches += n_disp
                 STATS.job_windows += len(cjobs)
@@ -809,7 +870,10 @@ def run_plan(plan: ExecutionPlan, on_window=None) -> list[EstimateResult]:
                     job.cursor = j0 + n
                     job.sampling_s += dt
                     if job.witnesses:
-                        _run_witness_window(plan, group, job, j0, n)
+                        with obs.span("engine.witness", trace=job.trace,
+                                      backend=job.backend, j0=int(j0),
+                                      n=int(n)):
+                            _run_witness_window(plan, group, job, j0, n)
                     if job.checkpoint_path:
                         _write_checkpoint(job, plan.chunk)
                     if on_window is not None:

@@ -26,9 +26,9 @@ import queue
 import select
 import sys
 import threading
-import time
 from typing import IO
 
+from .. import obs
 from ..resilience import classify, fire
 from ..resilience.retry import STATS as RSTATS
 
@@ -62,7 +62,7 @@ class LineSource:
     def readline(self, timeout: float | None = None) -> str | None:
         if self._fd is None:
             return self._f.readline()          # "" only at EOF
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else obs.monotonic() + timeout
         while True:
             if b"\n" in self._buf:
                 line, _, self._buf = self._buf.partition(b"\n")
@@ -74,7 +74,7 @@ class LineSource:
             # select-before-deadline order is what makes readline(0)
             # drain buffered bytes instead of returning None on them
             wait = (None if deadline is None
-                    else max(0.0, deadline - time.monotonic()))
+                    else max(0.0, deadline - obs.monotonic()))
             ready, _, _ = select.select([self._fd], [], [], wait)
             if not ready:
                 return None                    # true timeout: fd is idle
@@ -106,7 +106,9 @@ class Emitter:
         self._thread.start()
 
     def emit(self, obj: dict) -> None:
-        self._q.put(obj)
+        # the caller's ambient trace rides along so the writer thread's
+        # emit span chains to the request that produced the response
+        self._q.put((obj, obs.current_trace()))
 
     def close(self) -> None:
         """Drain everything queued, then stop the writer thread."""
@@ -115,13 +117,15 @@ class Emitter:
 
     def _run(self) -> None:
         while True:
-            obj = self._q.get()
-            if obj is None:
+            item = self._q.get()
+            if item is None:
                 return
+            obj, tid = item
             try:
-                fire("serve.write")
-                self._out.write(json.dumps(obj) + "\n")
-                self._out.flush()
+                with obs.span("gateway.emit", stage="emit", trace=tid):
+                    fire("serve.write")
+                    self._out.write(json.dumps(obj) + "\n")
+                    self._out.flush()
             except Exception as e:
                 # a client that hung up must not kill the server; the
                 # loss is counted and classified for health

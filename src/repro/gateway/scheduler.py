@@ -44,8 +44,9 @@ from __future__ import annotations
 import sys
 import threading
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
+from .. import obs
 from ..resilience import OverloadedError, classify
 
 
@@ -59,11 +60,20 @@ class Work:
     ``"close_tenant"`` on a tenant queue; ``"open_tenant"`` on the
     control queue).  ``obj`` is the parsed wire object; ``tenant`` the
     routing name (None for control work).
+
+    ``trace``/``t_enq`` are the telemetry hand-off across the
+    intake -> dispatcher thread boundary: the intake thread's ambient
+    trace id and enqueue timestamp ride the work item, so the
+    dispatcher can re-enter the request's trace context and observe the
+    queue-wait stage (``repro_stage_seconds{stage="queue_wait"}``).
+    They never influence scheduling or execution.
     """
 
     kind: str
     obj: dict
     tenant: str | None = None
+    trace: str | None = field(default_factory=lambda: obs.current_trace())
+    t_enq: float = field(default_factory=lambda: obs.monotonic())
 
 
 @dataclass

@@ -31,6 +31,22 @@ Wire verbs (one JSON object per line; all tenant-touching lines carry
     {"cmd": "advance", "tenant": "soc"}
     {"cmd": "close_tenant", "tenant": "fin"}
     {"cmd": "health"}   {"cmd": "stats"}   {"cmd": "quit"}
+    {"cmd": "metrics"}  {"cmd": "trace"}   {"cmd": "profile", "windows": 2}
+
+Telemetry (see ``repro.obs`` for the layer's contracts): every
+tenant-touching wire line is an intake point — under ``REPRO_OBS=trace``
+it mints a trace id that rides the :class:`~repro.gateway.scheduler.Work`
+item across the intake -> dispatcher -> emitter thread boundaries, so
+one request's span chain (``gateway.intake`` -> ``queue_wait`` ->
+``session.drain`` -> ``engine.dispatch`` -> ``gateway.emit``) shares one
+id in the flight recorder.  Per-tenant end-to-end latency lands in the
+``repro_tenant_request_seconds{tenant=...}`` /
+``repro_tenant_advance_seconds{tenant=...}`` histograms (enqueue ->
+response handoff).  ``metrics`` answers the full registry as Prometheus
+text, ``trace`` exports the flight recorder, ``profile`` arms the
+``jax.profiler`` seam around the next N engine dispatches (requires the
+server to have been started with ``--profile-dir``) — all answered
+inline, never waiting on a drain.
 
 Backpressure: each tenant holds at most ``quota`` pending work items;
 a submit past the quota answers ``{"ok": false, "error_kind":
@@ -54,6 +70,7 @@ import json
 import sys
 from typing import IO
 
+from .. import obs
 from ..api.config import EstimateConfig
 from ..resilience import OVERLOADED, OverloadedError, error_payload
 from ..resilience.retry import STATS as RSTATS
@@ -68,6 +85,18 @@ _ENGINE_COUNTERS = ("dispatches", "fused_dispatches", "job_windows",
 
 _OPEN_FIELDS = frozenset(("cmd", "tenant", "graph", "stream", "horizon",
                           "wal"))
+
+#: per-tenant end-to-end latency: intake enqueue -> response handoff to
+#: the emitter queue (the client-visible service time minus the final
+#: write itself, which the ``emit`` stage histogram covers)
+_TENANT_REQ = obs.REGISTRY.histogram(
+    "repro_tenant_request_seconds",
+    "gateway request latency per tenant (enqueue to response handoff)",
+    labels=("tenant",))
+_TENANT_ADV = obs.REGISTRY.histogram(
+    "repro_tenant_advance_seconds",
+    "gateway advance latency per tenant (enqueue to epoch responses)",
+    labels=("tenant",))
 
 
 def _engine_snapshot() -> dict:
@@ -104,6 +133,12 @@ class _Gateway:
 
     # -- dispatcher side (all tenant mutation happens here) --------------
     def _execute(self, unit) -> None:
+        if obs.enabled():
+            # how long each item sat queued behind other tenants' turns
+            now = obs.monotonic()
+            for w in (unit if isinstance(unit, list) else (unit,)):
+                obs.observe_stage("queue_wait", now - w.t_enq,
+                                  trace=w.trace)
         if isinstance(unit, list):
             self._do_requests(unit)
             return
@@ -120,7 +155,7 @@ class _Gateway:
 
         tenant = self.state.tenants.get(batch[0].tenant)
         before = _engine_snapshot()
-        jobs = []                       # (rid, Handle) in arrival order
+        jobs = []                       # (rid, Handle, Work) in arrival order
         session = tenant.cur_session() if tenant is not None else None
         for w in batch:
             rid = w.obj.get("id")
@@ -137,7 +172,10 @@ class _Gateway:
                     raise RuntimeError(
                         "no epoch materialized yet — send ingest + advance "
                         "first")
-                jobs.append((rid, session.submit(req)))
+                # submit inside the work item's trace context so the
+                # Handle (and its engine jobs) inherit the wire trace
+                with obs.trace_context(w.trace):
+                    jobs.append((rid, session.submit(req), w))
             except Exception as e:       # noqa: BLE001 — per-line answer
                 self._err(dict(id=rid, tenant=batch[0].tenant),
                           error_payload(e), tenant)
@@ -148,16 +186,20 @@ class _Gateway:
                 RSTATS.drain_failures += 1
                 sys.stderr.write(f"gateway: drain failed for tenant "
                                  f"{tenant.name!r}: {error_payload(e)}\n")
-        for rid, h in jobs:
+        for rid, h, w in jobs:
             try:
-                if h.request.witnesses:
-                    for p in h._progress:
-                        self.emit(_progress_line(rid, tenant.name, p))
-                d = _response(rid, h)   # carries the final witnesses
-                d["tenant"] = tenant.name
-                if d.get("degraded"):
-                    tenant.stats.degraded += 1
-                self.emit(d)
+                with obs.trace_context(w.trace):
+                    if h.request.witnesses:
+                        for p in h._progress:
+                            self.emit(_progress_line(rid, tenant.name, p))
+                    d = _response(rid, h)   # carries the final witnesses
+                    d["tenant"] = tenant.name
+                    if d.get("degraded"):
+                        tenant.stats.degraded += 1
+                    self.emit(d)
+                if obs.enabled():
+                    _TENANT_REQ.labels(tenant=tenant.name).observe(
+                        obs.monotonic() - w.t_enq)
                 tenant.stats.served += 1
                 self.served += 1
             except Exception as e:       # noqa: BLE001 — server stays up
@@ -235,24 +277,28 @@ class _Gateway:
         try:
             tenant = self._stream_of(w)
             before = _engine_snapshot()
-            er = tenant.stream.advance()
-            queries = tenant.stream.queries
-            for qid in sorted(er.results):
-                res, q = er.results[qid], queries[qid]
-                # a standing query's witnesses stream per epoch — the
-                # reservoir rides its subscription line (_sub_response)
-                d = _sub_response(qid, q, er.epoch.index, res)
-                d["tenant"] = tenant.name
-                self.emit(d)
-                tenant.stats.served += 1
-                self.served += 1
-            ep = er.epoch
-            self.emit(dict(ok=True, cmd="advance", tenant=tenant.name,
-                           epoch=ep.index, m=ep.m_real, n=ep.n_real,
-                           t_lo=ep.t_lo, t_hi=ep.t_hi, evicted=ep.evicted,
-                           buckets=list(ep.buckets),
-                           queries=len(er.results),
-                           advance_s=round(er.advance_s, 6)))
+            with obs.trace_context(w.trace):
+                er = tenant.stream.advance()
+                queries = tenant.stream.queries
+                for qid in sorted(er.results):
+                    res, q = er.results[qid], queries[qid]
+                    # a standing query's witnesses stream per epoch — the
+                    # reservoir rides its subscription line (_sub_response)
+                    d = _sub_response(qid, q, er.epoch.index, res)
+                    d["tenant"] = tenant.name
+                    self.emit(d)
+                    tenant.stats.served += 1
+                    self.served += 1
+                ep = er.epoch
+                self.emit(dict(ok=True, cmd="advance", tenant=tenant.name,
+                               epoch=ep.index, m=ep.m_real, n=ep.n_real,
+                               t_lo=ep.t_lo, t_hi=ep.t_hi,
+                               evicted=ep.evicted, buckets=list(ep.buckets),
+                               queries=len(er.results),
+                               advance_s=round(er.advance_s, 6)))
+            if obs.enabled():
+                _TENANT_ADV.labels(tenant=tenant.name).observe(
+                    obs.monotonic() - w.t_enq)
             after = _engine_snapshot()
             tenant.stats.add_engine_delta(
                 {k: after[k] - before[k] for k in after})
@@ -319,7 +365,8 @@ class _Gateway:
                            exec_failures=s.exec_failures,
                            quota=self.sched.quota),
             evictions=self.state.evictions,
-            resilience=RSTATS.as_dict(), engine=self._engine_block())
+            resilience=RSTATS.as_dict(), engine=self._engine_block(),
+            obs=obs.summary())
 
     def stats(self) -> dict:
         d = self.health()
@@ -335,7 +382,8 @@ class _Gateway:
 def gateway_serve_loop(config: EstimateConfig | None = None,
                        infile: IO = None, outfile: IO = None, *,
                        max_tenants: int = 8, quota: int = 16,
-                       wal_dir: str | None = None, mesh=None) -> int:
+                       wal_dir: str | None = None, mesh=None,
+                       profile_dir: str | None = None) -> int:
     """Run the gateway NDJSON loop until EOF or ``quit``.
 
     Returns the number of estimation responses served (standing-query
@@ -343,8 +391,10 @@ def gateway_serve_loop(config: EstimateConfig | None = None,
     opened; ``quota`` is the per-tenant pending-work cap (the
     backpressure quota); ``wal_dir`` enables ``"wal": true`` stream
     tenants (WAL file paths derive from it server-side — never from the
-    wire).
+    wire); ``profile_dir`` enables the ``profile`` verb (profiler
+    output paths are server-side only, like WAL paths).
     """
+    from ..api.serve import _metrics, _profile, _trace_export
     cfg = (config or EstimateConfig()).resolve()
     src = LineSource(sys.stdin if infile is None else infile)
     gw = _Gateway(cfg, sys.stdout if outfile is None else outfile,
@@ -375,8 +425,18 @@ def gateway_serve_loop(config: EstimateConfig | None = None,
             elif cmd in ("health", "stats"):
                 # inline: a probe never waits on — or forces — a drain
                 gw.emit(gw.health() if cmd == "health" else gw.stats())
+            elif cmd == "metrics":
+                gw.emit(_metrics())
+            elif cmd == "trace":
+                gw.emit(_trace_export())
+            elif cmd == "profile":
+                gw.emit(_profile(obj, profile_dir))
             elif cmd == "open_tenant":
-                gw.sched.submit_control(Work("open_tenant", obj))
+                tid = obs.new_trace() if obs.enabled(obs.TRACE) else None
+                with obs.trace_context(tid), \
+                        obs.span("gateway.intake", stage="intake",
+                                 tenant=obj.get("tenant"), cmd=cmd):
+                    gw.sched.submit_control(Work("open_tenant", obj))
             elif cmd in ("close_tenant", "ingest", "advance", "subscribe",
                          "unsubscribe") or cmd is None:
                 kind = cmd or "request"
@@ -387,17 +447,24 @@ def gateway_serve_loop(config: EstimateConfig | None = None,
                     gw._err(head, error_payload(ValueError(
                         'tenant-touching lines need "tenant": "<name>"')))
                     continue
-                try:
-                    # by NAME, unresolved: the open_tenant this may be
-                    # racing sits in the control queue, which the
-                    # dispatcher always serves first
-                    gw.sched.submit(name, Work(kind, obj, tenant=name))
-                except OverloadedError as e:
-                    # quota shed: answered inline, dispatcher untouched
-                    t = gw.state.tenants.get(name)
-                    if t is not None:
-                        t.stats.overloaded += 1
-                    gw._err(head, error_payload(e))
+                # every tenant-touching line is an intake point: mint a
+                # trace id here so the Work item carries it across the
+                # dispatcher/emitter thread boundaries
+                tid = obs.new_trace() if obs.enabled(obs.TRACE) else None
+                with obs.trace_context(tid), \
+                        obs.span("gateway.intake", stage="intake",
+                                 tenant=name, id=obj.get("id")):
+                    try:
+                        # by NAME, unresolved: the open_tenant this may be
+                        # racing sits in the control queue, which the
+                        # dispatcher always serves first
+                        gw.sched.submit(name, Work(kind, obj, tenant=name))
+                    except OverloadedError as e:
+                        # quota shed: answered inline, dispatcher untouched
+                        t = gw.state.tenants.get(name)
+                        if t is not None:
+                            t.stats.overloaded += 1
+                        gw._err(head, error_payload(e))
             else:
                 gw.emit(dict(ok=False, error=f"unknown cmd {cmd!r}"))
     finally:

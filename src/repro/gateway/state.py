@@ -33,10 +33,10 @@ from __future__ import annotations
 
 import os
 import re
-import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
+from .. import obs
 from ..api.config import EstimateConfig
 from ..api.session import Session
 from ..resilience import BadRequestError, OverloadedError
@@ -79,7 +79,7 @@ class Tenant:
         self.stream = stream
         self.wal_path = wal_path
         self.stats = TenantStats()
-        self.opened_t = time.monotonic()
+        self.opened_t = obs.monotonic()
         self.last_active = self.opened_t
 
     def cur_session(self) -> Session | None:
@@ -88,7 +88,7 @@ class Tenant:
         return self.session if self.mode == "graph" else self.stream.session
 
     def touch(self) -> None:
-        self.last_active = time.monotonic()
+        self.last_active = obs.monotonic()
 
     def close(self) -> None:
         if self.mode == "graph":

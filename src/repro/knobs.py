@@ -67,6 +67,15 @@ KNOBS: dict[str, Knob] = {k.name: k for k in (
          "xla (~14 MiB/core on real TPU hardware)"),
     Knob("REPRO_SAMPLER_BLOCK", 1024, int,
          "sample-axis block width of the fused tree_sampler kernel"),
+    Knob("REPRO_OBS", "off", str,
+         "observability level: 'off' (no-op recorder), 'metrics' "
+         "(counters/gauges/histograms), 'trace' (metrics + host-side "
+         "spans into the flight recorder); never result-affecting — "
+         "estimates are bit-identical at every level",
+         choices=("off", "metrics", "trace")),
+    Knob("REPRO_OBS_RING", 4096, int,
+         "flight-recorder capacity (spans); the ring overwrites the "
+         "oldest span when full"),
 )}
 
 

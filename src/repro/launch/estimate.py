@@ -168,6 +168,15 @@ def main() -> None:
                          "log; ingest/advance history is fsynced to PATH "
                          "and replayed on restart (torn tail truncated) "
                          "so a killed server resumes bit-identically")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the obs flight recorder as NDJSON to "
+                         "PATH at process exit (implies REPRO_OBS=trace; "
+                         "works in every mode — see repro.obs)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="serve modes: enable the 'profile' wire verb — "
+                         "jax.profiler traces of the next N engine "
+                         "dispatches land under DIR (profiler paths are "
+                         "server-side only, never from the wire)")
     args = ap.parse_args()
     if args.stream and not args.serve:
         ap.error("--stream requires --serve (for offline replay use "
@@ -186,9 +195,27 @@ def main() -> None:
     if args.wal_dir is not None and not args.gateway:
         ap.error("--wal-dir only applies to --serve --gateway (single-"
                  "stream serving uses --wal PATH)")
+    if args.profile_dir is not None and not args.serve:
+        ap.error("--profile-dir requires --serve (the 'profile' verb "
+                 "arms the profiler over the wire)")
     if args.devices:
         from .mesh import force_host_device_count
         force_host_device_count(args.devices)
+    if args.trace_out:
+        import atexit
+        import sys as _sys
+
+        from .. import obs
+        if obs.level() < obs.TRACE:
+            obs.set_level("trace")       # the flag implies trace recording
+
+        @atexit.register
+        def _dump_trace(path=args.trace_out):
+            with open(path, "w") as f:
+                f.write(obs.RECORDER.export_ndjson())
+            print(f"trace: {obs.RECORDER.recorded} spans recorded, "
+                  f"{len(obs.RECORDER)} in ring -> {path}",
+                  file=_sys.stderr)
 
     from ..core.estimator import estimate
     from ..core.motif import get_motif, is_motif_spec
@@ -211,7 +238,8 @@ def main() -> None:
               file=sys.stderr, flush=True)
         served = gateway_serve_loop(cfg, max_tenants=args.max_tenants,
                                     quota=args.tenant_quota,
-                                    wal_dir=args.wal_dir, mesh=mesh)
+                                    wal_dir=args.wal_dir, mesh=mesh,
+                                    profile_dir=args.profile_dir)
         print(f"served {served} responses", file=sys.stderr)
         return
 
@@ -240,7 +268,8 @@ def main() -> None:
                   f"wal={args.wal}  "
                   f"mesh={mesh.shape if mesh is not None else None}",
                   file=sys.stderr, flush=True)
-            served = serve_loop(None, stream=ss)
+            served = serve_loop(None, stream=ss,
+                                profile_dir=args.profile_dir)
         print(f"served {served} responses", file=sys.stderr)
         return
 
@@ -293,7 +322,7 @@ def main() -> None:
               f"mesh={mesh.shape if mesh is not None else None}  "
               f"window={args.coalesce_window}s max={args.coalesce_max}",
               file=sys.stderr, flush=True)
-        served = serve_loop(session)
+        served = serve_loop(session, profile_dir=args.profile_dir)
         print(f"served {served} requests", file=sys.stderr)
         return
 

@@ -1,0 +1,21 @@
+"""Sanctioned wall-clock reads — the ONE module allowed to touch
+``time.monotonic`` / ``time.perf_counter``.
+
+The ``obs-span-discipline`` lint rule (see ``repro/analysis/rules.py``)
+errors on any wall-clock read under ``repro/obs/``-scoped layers
+(``repro/gateway/``, ``repro/core/engine.py``) that does not come from
+here: all timing flows through the span/histogram API or these two
+accessors, keeping the ``det-impure-in-traced`` contract auditable —
+wall-clock values are host-side observability metadata and never enter
+traced code or sampling keys.
+
+``monotonic`` is for deadline math (comparable across threads);
+``perf_counter`` is for durations.  Both are re-exported from
+``repro.obs``.
+"""
+from __future__ import annotations
+
+import time
+
+monotonic = time.monotonic
+perf_counter = time.perf_counter

@@ -17,7 +17,11 @@ other layers thread through:
     Capped exponential backoff with *deterministic* jitter
     (splitmix64 of the caller's seed — never wall-clock or host RNG),
     the frozen :class:`RetryPolicy`, and the process-wide
-    :data:`STATS` counters the ``health`` verb reports.
+    :data:`STATS` counters the ``health`` verb reports.  Since the
+    telemetry layer landed, :class:`ResilienceStats` is a
+    ``repro.obs`` :class:`~repro.obs.registry.CounterBlock` facade:
+    same attribute API, but every counter is monotonic, registry-backed,
+    and scrapable via the ``{"cmd": "metrics"}`` wire verb.
 
 ``faultinject``
     A deterministic fault-injection harness: named ``fire()`` sites
@@ -30,8 +34,9 @@ other layers thread through:
     Crash-safe file writes (temp file + ``os.replace``) with an
     injection point mid-write, used by the engine's checkpoints.
 
-Layering: this package imports ONLY the stdlib — the engine, stream,
-api and train layers all import it without cycles.  The degradation
+Layering: this package imports only the stdlib plus ``repro.obs``
+(itself stdlib-only) — the engine, stream, api and train layers all
+import it without cycles.  The degradation
 ladders built on top (engine: pallas -> xla -> dispatch-window halving;
 session: deadline -> partial-at-last-window) are execution-only and
 preserve the bit-identity contract: chunk ``j`` always draws

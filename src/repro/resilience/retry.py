@@ -15,6 +15,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from ..obs.registry import CounterBlock
+
 
 @dataclass(frozen=True)
 class RetryPolicy:
@@ -62,9 +64,12 @@ def backoff_delays(policy: RetryPolicy, seed: int = 0) -> list:
             for a in range(max(0, policy.max_attempts - 1))]
 
 
-@dataclass
-class ResilienceStats:
-    """Process-wide resilience counters (the ``health`` verb's payload).
+class ResilienceStats(CounterBlock):
+    """Process-wide resilience counters (the ``health`` verb's payload),
+    a :class:`repro.obs.registry.CounterBlock` facade — each field is a
+    registry counter (``repro_resilience_*_total``) that also appears in
+    the ``{"cmd": "metrics"}`` Prometheus scrape.  Counters are
+    monotonic; ``reset()`` is a test-only seam.
 
     ``retries``           transient dispatch failures retried in place
     ``ladder_steps``      degradations taken (backend swap or window halving)
@@ -75,26 +80,19 @@ class ResilienceStats:
     ``wal_replayed``      WAL records replayed by recovery
     """
 
-    retries: int = 0
-    ladder_steps: int = 0
-    deadline_degraded: int = 0
-    drain_failures: int = 0
-    emit_failures: int = 0
-    wal_records: int = 0
-    wal_replayed: int = 0
-
-    def reset(self) -> None:
-        self.retries = self.ladder_steps = self.deadline_degraded = 0
-        self.drain_failures = self.emit_failures = 0
-        self.wal_records = self.wal_replayed = 0
-
-    def as_dict(self) -> dict:
-        return dict(retries=self.retries, ladder_steps=self.ladder_steps,
-                    deadline_degraded=self.deadline_degraded,
-                    drain_failures=self.drain_failures,
-                    emit_failures=self.emit_failures,
-                    wal_records=self.wal_records,
-                    wal_replayed=self.wal_replayed)
+    _PREFIX = "repro_resilience"
+    _FIELDS = ("retries", "ladder_steps", "deadline_degraded",
+               "drain_failures", "emit_failures", "wal_records",
+               "wal_replayed")
+    _DOCS = {
+        "retries": "transient dispatch failures retried in place",
+        "ladder_steps": "degradations taken (backend swap or halving)",
+        "deadline_degraded": "requests answered as deadline partials",
+        "drain_failures": "serve-loop drains that raised",
+        "emit_failures": "response write/flush failures swallowed",
+        "wal_records": "WAL records appended this process",
+        "wal_replayed": "WAL records replayed by recovery",
+    }
 
 
 STATS = ResilienceStats()

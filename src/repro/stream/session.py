@@ -38,9 +38,9 @@ stream and its own motif spec.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
+from .. import obs
 from ..api.config import EstimateConfig
 from ..api.session import Request, Session
 from ..core.estimator import EstimateResult
@@ -192,29 +192,37 @@ class StreamingSession:
         """
         if self._closed:
             raise RuntimeError("StreamingSession is closed")
-        t0 = time.perf_counter()
-        epoch = self.store.advance()
-        if self.session is not None:
-            self.session.close()
-        self.session = Session(epoch.graph, self.config, mesh=self.mesh)
-        self.epoch = epoch
-        t1 = time.perf_counter()
-        results: dict[int, EstimateResult] = {}
-        if self._queries:
-            items = list(self._queries.items())
-            handles = self.session.submit_many([
-                Request(motif=q.motif, delta=int(q.delta), k=int(q.k),
-                        seed=int(q.seed), target_rse=q.target_rse,
-                        k_max=q.k_max, witnesses=int(q.witnesses))
-                for _, q in items])
-            for (qid, _), h in zip(items, handles):
-                results[qid] = h.result()
-        dt = time.perf_counter() - t0
+        # an advance is an intake point: mint (or inherit) a trace id so
+        # the epoch's snapshot/plan/drain spans chain together
+        tid = obs.current_trace() or (
+            obs.new_trace() if obs.enabled(obs.TRACE) else None)
+        with obs.trace_context(tid), \
+                obs.span("stream.advance", stage="advance",
+                         queries=len(self._queries)) as sp_adv:
+            epoch = self.store.advance()
+            if self.session is not None:
+                self.session.close()
+            self.session = Session(epoch.graph, self.config, mesh=self.mesh)
+            self.epoch = epoch
+            sp_adv.set(epoch=epoch.index)
+            results: dict[int, EstimateResult] = {}
+            with obs.span("stream.estimate") as sp_est:
+                if self._queries:
+                    items = list(self._queries.items())
+                    handles = self.session.submit_many([
+                        Request(motif=q.motif, delta=int(q.delta),
+                                k=int(q.k), seed=int(q.seed),
+                                target_rse=q.target_rse, k_max=q.k_max,
+                                witnesses=int(q.witnesses))
+                        for _, q in items])
+                    for (qid, _), h in zip(items, handles):
+                        results[qid] = h.result()
+        dt = sp_adv.elapsed_s
         self.stats.epochs += 1
         self.stats.queries_run += len(results)
         self.stats.advance_s_total += dt
         return EpochResult(epoch=epoch, results=results, advance_s=dt,
-                           estimate_s=time.perf_counter() - t1)
+                           estimate_s=sp_est.elapsed_s)
 
     # -- ad-hoc queries --------------------------------------------------
     def query(self, request: Request) -> EstimateResult:

@@ -276,6 +276,52 @@ def test_resilience_bare_except_scoped_and_clean_idioms(tmp_path):
     assert "resilience-bare-except" not in rules_fired(q)
 
 
+def test_obs_span_discipline_fires(tmp_path):
+    p = corpus(tmp_path, "repro/gateway/bad_clock.py", """
+        import time
+        import time as _t
+        from time import perf_counter
+
+        def wait_deadline(q, timeout):
+            deadline = time.monotonic() + timeout
+            while _t.monotonic() < deadline:
+                q.get_nowait()
+    """)
+    findings = [f for f in lint_file(p)
+                if f.rule == "obs-span-discipline"]
+    # the from-import plus both aliased reads
+    assert len(findings) == 3
+
+
+def test_obs_span_discipline_scoped_and_clean_idioms(tmp_path):
+    # the seam itself (obs.monotonic) and waiting (time.sleep) pass
+    p = corpus(tmp_path, "repro/gateway/ok_clock.py", """
+        import time
+
+        from .. import obs
+
+        def wait_deadline(q, timeout):
+            deadline = obs.monotonic() + timeout
+            time.sleep(0.01)
+            return deadline
+    """)
+    assert "obs-span-discipline" not in rules_fired(p)
+    # repro/obs/ IS the seam: its own clock reads are exempt
+    q = corpus(tmp_path, "repro/obs/clockish.py", """
+        from time import monotonic, perf_counter
+    """)
+    assert "obs-span-discipline" not in rules_fired(q)
+    # the rule polices only the instrumented layers: a raw read in an
+    # unscoped module (estimator internals, benchmarks) is out of scope
+    r = corpus(tmp_path, "repro/core/estimator_ish.py", """
+        import time
+
+        def f():
+            return time.perf_counter()
+    """)
+    assert "obs-span-discipline" not in rules_fired(r)
+
+
 # ---------------------------------------------------------------------------
 # clean corpus: sanctioned idioms pass
 # ---------------------------------------------------------------------------
@@ -394,7 +440,8 @@ def test_all_rules_have_trigger_coverage():
     covered = {"env-seam", "retrace-static-argnames",
                "retrace-scalar-capture", "det-key-origin",
                "det-cohort-key", "det-impure-in-traced", "det-host-rng",
-               "exact-narrowing-cast", "resilience-bare-except"}
+               "exact-narrowing-cast", "resilience-bare-except",
+               "obs-span-discipline"}
     assert covered == set(RULES)
 
 
